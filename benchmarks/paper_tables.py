@@ -1,0 +1,176 @@
+"""One benchmark per paper table/figure (synthetic data; see DESIGN.md §6).
+
+Each function returns (name, us_per_call, derived) rows:
+  us_per_call — mean wall time of one jitted train step (μs)
+  derived     — the table's headline quantity (accuracy / loss metric)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import (
+    CHOLESTEROL_MLP, COVID_CNN, MURA_VGG19, TABLE1_CNN,
+)
+from repro.core.adapters import cnn_adapter, mlp_adapter
+from repro.core.fedavg import train_fedavg
+from repro.core.trainer import (
+    SplitTrainConfig, client_batch_sizes, evaluate, make_spatio_temporal_step,
+    train_single_client, train_spatio_temporal,
+)
+from repro.data import make_cholesterol, make_covid_ct, make_mura, split_clients, train_val_test_split
+from repro.optim import adamw
+
+Row = Tuple[str, float, str]
+
+
+def _time_step(step, state, batches, n: int = 5) -> float:
+    """Mean μs per jitted call (post-warmup)."""
+    rng = jax.random.PRNGKey(0)
+    state, _ = step(state, batches, rng)  # warmup/compile
+    t0 = time.perf_counter()
+    for i in range(n):
+        state, m = step(state, batches, jax.random.fold_in(rng, i))
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _shards_and_test(x, y):
+    train, _val, test = train_val_test_split(x, y)
+    return split_clients(*train), test
+
+
+def table1_layers_at_client() -> List[Row]:
+    """Paper Table 1: accuracy vs number of layers held at the end-system.
+    (cifar-like 10-class synthetic; 16/32/64/128/256-filter stack)."""
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 1500
+    x = rng.random((n, 32, 32, 3), dtype=np.float32)
+    # 10-class signal: class = dominant quadrant/channel pattern
+    y = (x[:, :16, :16, 0].mean((1, 2)) * 10).astype(np.int64) % 10
+    x[np.arange(n), y % 32, (y * 3) % 32, y % 3] += 2.0  # class-marker pixel
+    y = y.astype(np.int64)
+    shards, test = _shards_and_test(x, y)
+    # classic split learning (paper ref [8]'s Table-1 setting): client layers
+    # TRAIN end-to-end; the cut costs accuracy as it deepens. The detached
+    # (temporal-split) mode freezes client layers and inverts the trend.
+    tc = SplitTrainConfig(server_batch=64, mode="e2e")
+    for cut in range(0, 5):
+        cfg = dataclasses.replace(TABLE1_CNN, cut_layers=cut, privacy_noise=0.02)
+        ad = cnn_adapter(cfg)
+        state, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards,
+                                         epochs=6, steps_per_epoch=10)
+        acc = evaluate(ad, state, *test)["accuracy"]
+        init_state, step = make_spatio_temporal_step(ad, tc, adamw(1e-3))
+        batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
+                   for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
+        us = _time_step(step, init_state(jax.random.PRNGKey(0)), batches)
+        rows.append((f"table1/L{cut}_at_client", us, f"accuracy={acc:.4f}"))
+    return rows
+
+
+def table5_fl_vs_split() -> List[Row]:
+    """Paper Table 5: FedAvg vs multi-client split learning on COVID CT."""
+    cfg = dataclasses.replace(
+        COVID_CNN, input_hw=(32, 32), stages=((8, 1), (16, 1), (32, 1)),
+        dense_units=(32,),
+    )
+    x, y = make_covid_ct(1200, hw=32, seed=0)
+    shards, test = _shards_and_test(x, y)
+    ad = cnn_adapter(cfg)
+    tc = SplitTrainConfig(server_batch=64)
+    rows = []
+
+    t0 = time.perf_counter()
+    st, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards, epochs=8, steps_per_epoch=10)
+    split_acc = evaluate(ad, st, *test)["accuracy"]
+    rows.append(("table5/split_learning", (time.perf_counter() - t0) / 80 * 1e6,
+                 f"accuracy={split_acc:.4f}"))
+
+    t0 = time.perf_counter()
+    gp, _ = train_fedavg(ad, tc, adamw(1e-3), shards, rounds=8, local_steps=10)
+    fwd = jax.jit(lambda p, xb: ad.server_forward(
+        p["server"], ad.client_forward(p["client"], xb, None)))
+    out = fwd(gp, jnp.asarray(test[0]))
+    fl_acc = float(ad.metrics(out, jnp.asarray(test[1]))["accuracy"])
+    rows.append(("table5/fedavg", (time.perf_counter() - t0) / 240 * 1e6,
+                 f"accuracy={fl_acc:.4f}"))
+    rows.append(("table5/gap", 0.0, f"split_minus_fl={split_acc - fl_acc:+.4f}"))
+    return rows
+
+
+def table6_mura_parts() -> List[Row]:
+    """Paper Table 6: per-body-part accuracy, single vs spatio-temporal."""
+    cfg = dataclasses.replace(
+        MURA_VGG19, input_hw=(32, 32), stages=((8, 1), (16, 1), (32, 1)),
+        dense_units=(64,),
+    )
+    ad = cnn_adapter(cfg)
+    tc = SplitTrainConfig(server_batch=64)
+    rows = []
+    for part in ("wrist", "elbow", "humerus"):
+        x, y = make_mura(900, hw=32, seed=0, part=part)
+        shards, test = _shards_and_test(x, y)
+        st, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards, epochs=10, steps_per_epoch=8)
+        multi = evaluate(ad, st, *test)["accuracy"]
+        st1, _ = train_single_client(ad, tc, adamw(1e-3), shards[2], epochs=10, steps_per_epoch=8)
+        single = evaluate(ad, st1, *test)["accuracy"]
+        rows.append((f"table6/{part}", 0.0,
+                     f"single={single:.4f};spatio={multi:.4f};delta={multi-single:+.4f}"))
+    return rows
+
+
+def table7_cholesterol() -> List[Row]:
+    """Paper Table 7: MSLE/RMSLE/sMAPE for single vs spatio-temporal."""
+    x, y = make_cholesterol(6000, seed=0)
+    shards, test = _shards_and_test(x, y)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = SplitTrainConfig(server_batch=256)
+    st, _ = train_spatio_temporal(ad, tc, adamw(3e-3), shards, epochs=15, steps_per_epoch=10)
+    multi = evaluate(ad, st, *test)
+    st1, _ = train_single_client(ad, tc, adamw(3e-3), shards[2], epochs=15, steps_per_epoch=10)
+    single = evaluate(ad, st1, *test)
+
+    init_state, step = make_spatio_temporal_step(ad, tc, adamw(3e-3))
+    batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
+               for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
+    us = _time_step(step, init_state(jax.random.PRNGKey(0)), batches)
+    rows = [("table7/step_time", us, "spatio-temporal step")]
+    for k in ("msle", "rmsle", "smape"):
+        rows.append((f"table7/{k}", 0.0,
+                     f"single={single[k]:.4f};spatio={multi[k]:.4f}"))
+    return rows
+
+
+def fig7_privacy_inversion() -> List[Row]:
+    """Figs. 2/7/8 quantified: inversion-attack reconstruction error vs cut
+    depth and privacy noise (higher MSE / lower NCC = stronger privacy)."""
+    from repro.core.inversion import inversion_attack_report
+
+    x, _ = make_covid_ct(1, hw=32, seed=0)
+    x = jnp.asarray(x)
+    rows = []
+    for cut, noise in [(1, 0.0), (1, 0.1), (2, 0.0), (2, 0.1)]:
+        cfg = dataclasses.replace(
+            COVID_CNN, input_hw=(32, 32), stages=((8, 1), (16, 1), (32, 1)),
+            dense_units=(32,), cut_layers=cut, privacy_noise=noise,
+        )
+        ad = cnn_adapter(cfg)
+        params = ad.init(jax.random.PRNGKey(0))["client"]
+        key = jax.random.PRNGKey(1) if noise > 0 else None
+        t0 = time.perf_counter()
+        rep = inversion_attack_report(
+            lambda z: ad.client_forward(params, z, key), x, steps=120,
+            # attacker knows weights but NOT the client's noise realization
+            attacker_forward=lambda z: ad.client_forward(params, z, None),
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"privacy/cut{cut}_noise{noise}", us,
+                     f"mse={rep['mse']:.5f};psnr={rep['psnr_db']:.2f}dB;ncc={rep['ncc']:.3f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline table from dry-run artifacts (experiments/dryrun_*.json).
+
+The dry-run itself (512 forced host devices) must run as its own process:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun_single.json
+This benchmark renders whatever artifacts exist; if none, it reports that.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def rows_from_artifacts() -> List[Row]:
+    rows: List[Row] = []
+    files = sorted(glob.glob(os.path.join(ART_DIR, "dryrun_*.json")))
+    if not files:
+        return [("roofline/no_artifacts", 0.0,
+                 "run: python -m repro.launch.dryrun --all --out experiments/dryrun_single.json")]
+    for path in files:
+        with open(path) as f:
+            results = json.load(f)
+        for r in results:
+            if r.get("status") != "ok":
+                continue
+            name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+            us = max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6
+            derived = (
+                f"bottleneck={r['bottleneck']};"
+                f"tc={r['t_compute']*1e3:.2f}ms;tm={r['t_memory']*1e3:.2f}ms;"
+                f"tx={r['t_collective']*1e3:.2f}ms;useful={r['useful_flops_ratio']:.2f}"
+            )
+            rows.append((name, us, derived))
+    return rows

@@ -1,0 +1,72 @@
+"""Render experiments/roofline_table.md from dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+MOVE_NOTES = {
+    ("compute",): "raise arithmetic intensity (larger tiles, bf16 accum) or add chips",
+    ("memory",): "cut HBM traffic: fuse attention/scan into VMEM kernels, remat less, bf16 moments",
+    ("collective",): "reshard to kill the dominant collective (see collectives_by_type), overlap with compute",
+}
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if x < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def main():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            rows += [r for r in json.load(f)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skips = [r for r in rows if r.get("status") == "skip"]
+    errs = [r for r in rows if r.get("status") == "error"]
+
+    lines = [
+        "# Roofline table (from multi-pod dry-run artifacts)",
+        "",
+        "terms in ms per step; bottleneck = max term; useful = 6·N_active·D / HLO_FLOPs_total",
+        "",
+        "| arch | shape | mesh | kind | t_compute | t_memory | t_collective | bottleneck | useful | peak mem/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        peak = r.get("memory_analysis", {}).get("temp_size_in_bytes")
+        note = MOVE_NOTES[(r["bottleneck"],)]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('kind','?')} "
+            f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+            f"| {r['t_collective']*1e3:.2f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2%} | {fmt_bytes(peak)} | {note} |"
+        )
+    if skips:
+        lines += ["", "## Skips (per DESIGN.md §4)", ""]
+        for r in skips:
+            lines.append(f"- {r['arch']} × {r['shape']}: {r['reason']}")
+    if errs:
+        lines += ["", "## ERRORS", ""]
+        for r in errs:
+            lines.append(f"- {r['arch']} × {r['shape']}: {r.get('error','?')[:300]}")
+
+    out = os.path.join(ART_DIR, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {out}: {len(ok)} ok, {len(skips)} skip, {len(errs)} errors")
+
+
+if __name__ == "__main__":
+    main()

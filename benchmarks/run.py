@@ -1,0 +1,47 @@
+"""Benchmark harness — one function per paper table. CSV: name,us_per_call,derived.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only table7 kernel
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="substring filters (e.g. table1 kernel roofline)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernel_perf, paper_tables, roofline_report
+
+    suites = [
+        ("table1", paper_tables.table1_layers_at_client),
+        ("table5", paper_tables.table5_fl_vs_split),
+        ("table6", paper_tables.table6_mura_parts),
+        ("table7", paper_tables.table7_cholesterol),
+        ("privacy", paper_tables.fig7_privacy_inversion),
+        ("kernel", kernel_perf.bench_privacy_conv),
+        ("kernel", kernel_perf.bench_flash_attention),
+        ("kernel", kernel_perf.bench_selective_scan),
+        ("roofline", roofline_report.rows_from_artifacts),
+    ]
+
+    print("name,us_per_call,derived")
+    for tag, fn in suites:
+        if args.only and not any(o in tag for o in args.only):
+            continue
+        t0 = time.time()
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # report, keep the harness going
+            print(f"{tag}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stdout)
+        print(f"# {tag} finished in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

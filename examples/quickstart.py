@@ -1,0 +1,45 @@
+"""Quickstart: spatio-temporal split learning in ~40 lines.
+
+Three hospitals hold imbalanced (7:2:1) private cholesterol records; a
+centralized server learns an LDL-C regressor without ever seeing raw data.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core.adapters import mlp_adapter
+from repro.core.trainer import (
+    SplitTrainConfig, evaluate, train_single_client, train_spatio_temporal,
+)
+from repro.data import make_cholesterol, split_clients, train_val_test_split
+from repro.optim import adamw
+
+
+def main():
+    # synthetic stand-in for the IRB-gated SNUH dataset (see DESIGN.md)
+    x, y = make_cholesterol(6000, seed=0)
+    train, _val, test = train_val_test_split(x, y)
+    shards = split_clients(*train, shares=(0.7, 0.2, 0.1))
+
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    tc = SplitTrainConfig(n_clients=3, data_shares=(0.7, 0.2, 0.1), server_batch=256)
+
+    print("training spatio-temporal split learning (3 hospitals)...")
+    state, _ = train_spatio_temporal(
+        adapter, tc, adamw(3e-3), shards, epochs=15, steps_per_epoch=10
+    )
+    multi = evaluate(adapter, state, *test)
+
+    print("training single-client baseline (the 10% hospital alone)...")
+    state1, _ = train_single_client(
+        adapter, tc, adamw(3e-3), shards[2], epochs=15, steps_per_epoch=10
+    )
+    single = evaluate(adapter, state1, *test)
+
+    print(f"\n{'metric':>8} {'spatio-temporal':>16} {'single-client':>14}")
+    for k in ("msle", "rmsle", "smape"):
+        print(f"{k:>8} {multi[k]:>16.4f} {single[k]:>14.4f}")
+    print("\n(cf. paper Table 7: spatio-temporal wins every metric)")
+
+
+if __name__ == "__main__":
+    main()

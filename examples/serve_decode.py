@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch demo-11m
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="demo-11m")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--prompt-len", "64", "--gen", "32"])
+
+
+if __name__ == "__main__":
+    main()

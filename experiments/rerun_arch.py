@@ -1,0 +1,37 @@
+"""Re-run specific arch rows of a dry-run artifact and merge (used after
+model-code changes so the recorded baseline matches the shipped code).
+
+  PYTHONPATH=src python experiments/rerun_arch.py dryrun_single.json falcon-mamba-7b jamba-1.5-large-398b
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+from repro.configs import SHAPES
+from repro.launch.dryrun import run_one
+
+fname = sys.argv[1]
+archs = sys.argv[2:]
+multi = "multi" in fname
+PATH = os.path.join(os.path.dirname(__file__), fname)
+
+rows = json.load(open(PATH))
+by_key = {(r["arch"], r["shape"]): i for i, r in enumerate(rows)}
+for arch in archs:
+    for shape in SHAPES:
+        print(f"== {arch} x {shape}", flush=True)
+        try:
+            r = run_one(arch, shape, multi_pod=multi)
+        except Exception as e:
+            import traceback; traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "status": "error", "error": str(e)}
+        key = (arch, shape)
+        if key in by_key:
+            rows[by_key[key]] = r
+        else:
+            rows.append(r)
+
+json.dump(rows, open(PATH, "w"), indent=2, default=str)
+print("merged")

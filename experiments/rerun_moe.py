@@ -1,0 +1,27 @@
+"""Re-run MoE-family rows of the single-pod dry-run after the dispatch fix
+and merge them into experiments/dryrun_single.json."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+
+from repro.configs import SHAPES
+from repro.launch.dryrun import run_one
+
+PATH = os.path.join(os.path.dirname(__file__), "dryrun_single.json")
+ARCHS = ["granite-moe-1b-a400m", "mixtral-8x7b", "jamba-1.5-large-398b", "demo-moe"]
+
+rows = json.load(open(PATH))
+by_key = {(r["arch"], r["shape"]): i for i, r in enumerate(rows)}
+for arch in ARCHS:
+    for shape in SHAPES:
+        print(f"== {arch} x {shape}")
+        try:
+            r = run_one(arch, shape)
+        except Exception as e:
+            import traceback; traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "status": "error", "error": str(e)}
+        rows[by_key[(arch, shape)]] = r
+
+json.dump(rows, open(PATH, "w"), indent=2, default=str)
+print("merged")

@@ -1,0 +1,71 @@
+"""Pytree checkpointing to npz + JSON manifest (orbax is not in this env).
+
+The tree structure is flattened with '/'-joined key paths; each leaf is an
+array in the npz. Works for params, optimizer state and decode caches alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    treedef_repr = str(jax.tree_util.tree_structure(tree))
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "treedef": treedef_repr,
+        "metadata": metadata or {},
+    }
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (shape template pytree)."""
+    data = np.load(path)
+    with open(path.replace(".npz", ".json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} extra={sorted(extra)[:5]}")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    restored_leaves = []
+    for path_keys, leaf in leaves_with_path[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_keys)
+        arr = data[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        restored_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], restored_leaves), manifest
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(
+        f for f in os.listdir(directory) if re.match(r"ckpt_\d+\.npz$", f)
+    )
+    return os.path.join(directory, ckpts[-1]) if ckpts else None

@@ -1,0 +1,24 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Importing the package registers every assigned architecture + paper models.
+from repro.configs import (  # noqa: F401
+    llama3_2_1b,
+    qwen2_7b,
+    falcon_mamba_7b,
+    command_r_plus_104b,
+    phi4_mini_3_8b,
+    hubert_xlarge,
+    granite_moe_1b_a400m,
+    mixtral_8x7b,
+    jamba_1_5_large_398b,
+    internvl2_26b,
+    paper_models,
+    demo,
+)

@@ -1,0 +1,18 @@
+"""Spatio-temporal split learning — the paper's primary contribution.
+
+- queue:      the server-side feature/parameter queue (paper Fig. 1)
+- protocol:   explicit two-program client/server simulation (protocol fidelity)
+- trainer:    fused SPMD multi-client trainers for the paper's CNN/MLP models
+- distributed: multi-client split learning over the assigned LLM architectures
+- fedavg:     the federated-learning baseline the paper compares against
+- inversion:  model-inversion attack used as the privacy metric
+"""
+from repro.core.queue import FeatureQueue
+from repro.core.trainer import (
+    SplitTrainConfig,
+    make_spatio_temporal_step,
+    make_single_client_step,
+    train_spatio_temporal,
+    train_single_client,
+)
+from repro.core.fedavg import train_fedavg

@@ -1,0 +1,80 @@
+"""Split-model adapters: a uniform (init / client_forward / server_forward /
+loss / metrics) interface over the paper's CNN, VGG19 and MLP models so the
+trainers, the protocol simulation and the benchmarks are model-agnostic."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import CNNConfig, MLPConfig
+from repro.metrics.losses import (
+    bce_with_logits,
+    binary_accuracy,
+    ce_with_logits,
+    mse,
+    msle,
+    multiclass_accuracy,
+    rmsle,
+    smape,
+)
+from repro.models import cnn as cnn_mod
+from repro.models import mlp as mlp_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitAdapter:
+    name: str
+    init: Callable[[Any], Any]  # key -> params {"client","server"}
+    client_forward: Callable[..., Any]  # (client_params, x, noise_key) -> features
+    server_forward: Callable[..., Any]  # (server_params, features) -> outputs
+    loss: Callable[[Any, Any], jnp.ndarray]
+    metrics: Callable[[Any, Any], Dict[str, jnp.ndarray]]
+
+
+def cnn_adapter(cfg: CNNConfig) -> SplitAdapter:
+    if cfg.loss == "bce":
+        loss = lambda out, y: bce_with_logits(out, y)
+        metrics = lambda out, y: {
+            "loss": bce_with_logits(out, y),
+            "accuracy": binary_accuracy(out, y),
+        }
+    else:  # multiclass
+        loss = lambda out, y: ce_with_logits(out, y)
+        metrics = lambda out, y: {
+            "loss": ce_with_logits(out, y),
+            "accuracy": multiclass_accuracy(out, y),
+        }
+    return SplitAdapter(
+        name=cfg.name,
+        init=lambda key: cnn_mod.init_cnn(key, cfg),
+        client_forward=lambda cp, x, nk=None: cnn_mod.client_forward(
+            {"client": cp}, cfg, x, nk
+        ),
+        server_forward=lambda sp, f: cnn_mod.server_forward({"server": sp}, cfg, f),
+        loss=loss,
+        metrics=metrics,
+    )
+
+
+def mlp_adapter(cfg: MLPConfig) -> SplitAdapter:
+    def metrics(out, y):
+        return {
+            "loss": mse(out, y),
+            "msle": msle(out, y),
+            "rmsle": rmsle(out, y),
+            "smape": smape(out, y),
+        }
+
+    return SplitAdapter(
+        name=cfg.name,
+        init=lambda key: mlp_mod.init_mlp(key, cfg),
+        client_forward=lambda cp, x, nk=None: mlp_mod.client_forward(
+            {"client": cp}, cfg, x, nk
+        ),
+        server_forward=lambda sp, f: mlp_mod.server_forward({"server": sp}, cfg, f),
+        loss=lambda out, y: mse(out, y),
+        metrics=metrics,
+    )

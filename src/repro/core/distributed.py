@@ -1,0 +1,135 @@
+"""Spatio-temporal split learning over the assigned production architectures.
+
+Integrates the paper's technique as a first-class distributed feature for the
+LLM/SSM/MoE/hybrid model zoo:
+
+  * per-client parameter banks (embedding + privacy block) with a leading
+    ``[n_clients]`` dim — sharded over the ``data`` mesh axis in production
+    (each data shard IS a hospital),
+  * the server trunk (prefix + scanned groups + head) sharded tensor-parallel
+    over ``model``,
+  * the cut enforced by stop_gradient in ``detached`` mode so the XLA graph
+    provably contains no backward path into client banks.
+
+Note: multi-client split learning requires an UNTIED head — a tied embedding
+table would hand every client's embedding to the server, violating the trust
+boundary. ``make_llm_split_step`` unties automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.layers import softmax_cross_entropy
+from repro.models.model import MOE_AUX_WEIGHT
+from repro.models.transformer import ModelOptions
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+def untie(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, tie_embeddings=False) if cfg.tie_embeddings else cfg
+
+
+def init_split_state(key, cfg: ModelConfig, n_clients: int, opt: Optimizer,
+                     dtype=None, shared_bank: bool = False, mode: str = "detached"):
+    """``shared_bank=True`` keeps ONE client parameter set instead of
+    per-client banks. In detached mode the privacy layers are frozen, so
+    identically-initialized banks are mathematically one bank — this sheds
+    the n_clients x (embedding + cut block) HBM duplication. (Per-client
+    noise keys still differ, so transmitted features remain client-unique.)"""
+    cfg = untie(cfg)
+    ks = jax.random.split(key, n_clients + 1)
+    ref = transformer.init_params(ks[0], cfg, dtype)
+    server = ref["server"]
+    if shared_bank:
+        banks = ref["client"]  # no leading dim
+    else:
+        banks = jax.vmap(
+            lambda k: transformer.init_params(k, cfg, dtype)["client"]
+        )(ks[1:])
+    trainable = server if mode == "detached" else {"server": server, "client_banks": banks}
+    return {
+        "client_banks": banks,  # leaves: [n_clients, ...] (or shared, no dim)
+        "server": server,
+        "opt": opt.init(trainable),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
+                        n_clients: int, clip_norm: float = 1.0,
+                        shared_bank: bool = False, mode: str = "detached"):
+    """Returns jit-able ``step(state, batch, rng)``.
+
+    batch: {"tokens": [C, b, S], "labels": [C, b, S]} — one sub-batch per
+    client. The client banks run under vmap (⇒ per-shard in production);
+    features concatenate into the server batch (the queue's steady state).
+
+    ``mode="detached"`` is the paper's temporal split (no grads into client
+    banks); ``mode="e2e"`` is classic split learning — gradients return to
+    the clients each step (ablation: what the temporal split costs/buys).
+    """
+    cfg = untie(cfg)
+    e2e = mode == "e2e"
+    if e2e:
+        opts = dataclasses.replace(opts, detach_cut=False)
+        assert not shared_bank, "e2e clients train independently; banks must be per-client"
+    else:
+        assert opts.detach_cut, "detached trainer requires detach_cut"
+
+    def loss_fn(server_params, client_banks, batch, rng):
+        noise_keys = jax.random.split(rng, n_clients)
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        feats, positions, _aux = jax.vmap(
+            lambda cp, bt, nk: transformer.client_forward(cp, cfg, bt, opts, nk),
+            in_axes=(None if shared_bank else 0, 0, 0),
+        )(client_banks, inputs, noise_keys)
+        C, b, S, d = feats.shape
+        h = feats.reshape(C * b, S, d)  # concatenate all features (Alg.1 l.11)
+        pos = positions.reshape(C * b, S)
+        labels = batch["labels"].reshape(C * b, -1)
+        logits, aux = transformer.server_forward(server_params, cfg, h, pos, opts)
+        if cfg.is_encoder_only:
+            ce = softmax_cross_entropy(logits, labels)
+        else:
+            ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+        return ce + MOE_AUX_WEIGHT * aux, ce
+
+    def step(state, batch, rng):
+        if e2e:
+
+            def lf(trainable):
+                return loss_fn(trainable["server"], trainable["client_banks"], batch, rng)
+
+            trainable = {"server": state["server"], "client_banks": state["client_banks"]}
+            (loss, ce), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            updates, new_opt = opt.update(grads, state["opt"], trainable, state["step"])
+            new_trainable = apply_updates(trainable, updates)
+            new_state = {
+                **state,
+                "server": new_trainable["server"],
+                "client_banks": new_trainable["client_banks"],
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+        else:
+            (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["server"], state["client_banks"], batch, rng
+            )
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            updates, new_opt = opt.update(grads, state["opt"], state["server"], state["step"])
+            new_state = {
+                **state,
+                "server": apply_updates(state["server"], updates),
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+        return new_state, {"loss": loss, "ce": ce, "grad_norm": gnorm}
+
+    return step

@@ -1,0 +1,76 @@
+"""Federated-learning (FedAvg) baseline — the comparison system in paper
+Table 5. Every client owns a FULL copy of the network, trains locally on its
+own shard, and the server averages parameter updates weighted by data share.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import SplitAdapter
+from repro.core.trainer import SplitTrainConfig
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+def train_fedavg(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    *,
+    rounds: int,
+    local_steps: int,
+    local_batch: int = 32,
+    seed: int = 0,
+    eval_fn=None,
+) -> Tuple[Any, List[Dict[str, float]]]:
+    """Returns (global_params, history). global_params = {"client","server"}
+    (full model; the split is structural only here — FL shares everything)."""
+    n = tc.n_clients
+    weights = np.asarray(tc.data_shares, np.float64)
+    weights = weights / weights.sum()
+
+    global_params = adapter.init(jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def local_sgd(params, opt_state, x, y, step):
+        def lf(p):
+            out = adapter.server_forward(
+                p["server"], adapter.client_forward(p["client"], x, None)
+            )
+            return adapter.loss(out, y)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        grads, _ = clip_by_global_norm(grads, tc.clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        return apply_updates(params, updates), opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    history: List[Dict[str, float]] = []
+    for rnd in range(rounds):
+        locals_: List[Any] = []
+        losses = []
+        for c in range(n):
+            params = jax.tree.map(jnp.copy, global_params)
+            opt_state = opt.init(params)
+            x_c, y_c = shards[c]
+            for s in range(local_steps):
+                idx = rng.integers(0, len(x_c), size=min(local_batch, len(x_c)))
+                params, opt_state, loss = local_sgd(
+                    params, opt_state, jnp.asarray(x_c[idx]), jnp.asarray(y_c[idx]),
+                    jnp.asarray(rnd * local_steps + s, jnp.int32),
+                )
+            locals_.append(params)
+            losses.append(float(loss))
+        # weighted parameter averaging (only updates leave the clients)
+        global_params = jax.tree.map(
+            lambda *ps: sum(w * p for w, p in zip(weights, ps)), *locals_
+        )
+        rec = {"round": rnd, "mean_local_loss": float(np.mean(losses))}
+        if eval_fn is not None:
+            rec.update({f"val_{k}": v for k, v in eval_fn(global_params).items()})
+        history.append(rec)
+    return global_params, history

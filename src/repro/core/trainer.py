@@ -1,0 +1,207 @@
+"""Fused SPMD trainers for spatio-temporal split learning (paper Alg. 1).
+
+The performance path compiles the whole protocol into one jitted step:
+
+  * every client runs its privacy-preserving layer on its own shard
+    (per-client parameter banks — the *spatial* split),
+  * feature maps are concatenated — the queue's steady-state batch mix,
+    with per-client batch sizes proportional to data shares (7:2:1),
+  * the server computes the rest of the network and updates ONLY the
+    server parameters in ``detached`` mode (the *temporal* split:
+    stop_gradient at the cut), or both sides in classic ``e2e`` mode.
+
+A wall-clock-faithful asynchronous queue simulation lives in
+``repro.core.protocol``; this module is the throughput-oriented equivalent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import SplitAdapter
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitTrainConfig:
+    n_clients: int = 3
+    data_shares: Tuple[float, ...] = (0.7, 0.2, 0.1)
+    server_batch: int = 64
+    mode: str = "detached"  # detached (paper) | e2e (classic split learning)
+    privacy_noise: float = 0.0
+    clip_norm: float = 1.0
+
+
+def client_batch_sizes(tc: SplitTrainConfig) -> List[int]:
+    """Per-step client contributions ∝ data shares, summing to server_batch."""
+    raw = [s * tc.server_batch for s in tc.data_shares]
+    sizes = [max(1, int(r)) for r in raw]
+    # fix rounding drift onto the largest client
+    sizes[int(np.argmax(tc.data_shares))] += tc.server_batch - sum(sizes)
+    return sizes
+
+
+# --------------------------------------------------------------------- steps
+def make_spatio_temporal_step(
+    adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
+):
+    """Returns (init_state, step). ``step(state, batches, rng)`` where
+    ``batches`` is a list of (x_c, y_c) — one per client, sizes per
+    ``client_batch_sizes`` — and updates server (+client in e2e) params."""
+
+    detached = tc.mode == "detached"
+
+    def init_state(key):
+        k0, *cks = jax.random.split(key, tc.n_clients + 1)
+        ref = adapter.init(k0)
+        server_params = ref["server"]
+        client_banks = [adapter.init(k)["client"] for k in cks]
+        trainable = (
+            server_params if detached else (client_banks, server_params)
+        )
+        return {
+            "client_banks": client_banks,
+            "server": server_params,
+            "opt": opt.init(trainable),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def loss_from(client_banks, server_params, batches, noise_keys):
+        feats, labels = [], []
+        for c, (x_c, y_c) in enumerate(batches):
+            f = adapter.client_forward(client_banks[c], x_c, noise_keys[c])
+            if detached:
+                f = jax.lax.stop_gradient(f)
+            feats.append(f)
+            labels.append(y_c)
+        fcat = jnp.concatenate(feats, axis=0)  # paper Alg.1 l.11: concat features
+        ycat = jnp.concatenate(labels, axis=0)
+        out = adapter.server_forward(server_params, fcat)
+        return adapter.loss(out, ycat), (out, ycat)
+
+    @jax.jit
+    def step(state, batches, rng):
+        noise_keys = list(jax.random.split(rng, tc.n_clients))
+        if detached:
+
+            def lf(server_params):
+                return loss_from(state["client_banks"], server_params, batches, noise_keys)
+
+            (loss, (out, ycat)), grads = jax.value_and_grad(lf, has_aux=True)(state["server"])
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            updates, new_opt = opt.update(grads, state["opt"], state["server"], state["step"])
+            new_server = apply_updates(state["server"], updates)
+            new_state = {**state, "server": new_server, "opt": new_opt, "step": state["step"] + 1}
+        else:
+
+            def lf(trainable):
+                cb, sp = trainable
+                return loss_from(cb, sp, batches, noise_keys)
+
+            trainable = (state["client_banks"], state["server"])
+            (loss, (out, ycat)), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            updates, new_opt = opt.update(grads, state["opt"], trainable, state["step"])
+            new_cb, new_server = apply_updates(trainable, updates)
+            new_state = {
+                **state,
+                "client_banks": new_cb,
+                "server": new_server,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+        metrics = adapter.metrics(out, ycat)
+        metrics["grad_norm"] = gnorm
+        return new_state, metrics
+
+    return init_state, step
+
+
+def make_single_client_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
+    """The baseline: ONE client + server (conventional split learning)."""
+    single = dataclasses.replace(tc, n_clients=1, data_shares=(1.0,))
+    return make_spatio_temporal_step(adapter, single, opt)
+
+
+# ------------------------------------------------------------------- loops
+def _epoch_batches(
+    rng: np.random.Generator,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    sizes: Sequence[int],
+    steps: int,
+):
+    """Sample per-client batches (with replacement for small clients —
+    matching queue arrival where a small hospital's data recirculates)."""
+    for _ in range(steps):
+        batch = []
+        for (x, y), b in zip(shards, sizes):
+            idx = rng.integers(0, len(x), size=b)
+            batch.append((jnp.asarray(x[idx]), jnp.asarray(y[idx])))
+        yield batch
+
+
+def train_spatio_temporal(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    *,
+    epochs: int,
+    steps_per_epoch: int,
+    seed: int = 0,
+    eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+) -> Tuple[Any, List[Dict[str, float]]]:
+    assert len(shards) == tc.n_clients
+    init_state, step = make_spatio_temporal_step(adapter, tc, opt)
+    state = init_state(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    sizes = client_batch_sizes(tc)
+    history = []
+    for ep in range(epochs):
+        ms = []
+        for batches in _epoch_batches(rng, shards, sizes, steps_per_epoch):
+            state, m = step(state, batches, jax.random.PRNGKey(rng.integers(1 << 31)))
+            ms.append(m)
+        rec = {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]}
+        rec["epoch"] = ep
+        if eval_fn is not None:
+            rec.update({f"val_{k}": v for k, v in eval_fn(state).items()})
+        history.append(rec)
+    return state, history
+
+
+def train_single_client(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    shard: Tuple[np.ndarray, np.ndarray],
+    *,
+    epochs: int,
+    steps_per_epoch: int,
+    seed: int = 0,
+    eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+):
+    single = dataclasses.replace(tc, n_clients=1, data_shares=(1.0,))
+    return train_spatio_temporal(
+        adapter, single, opt, [shard],
+        epochs=epochs, steps_per_epoch=steps_per_epoch, seed=seed, eval_fn=eval_fn,
+    )
+
+
+def evaluate(adapter: SplitAdapter, state, x, y, batch: int = 512) -> Dict[str, float]:
+    """Full-model eval using client bank 0 (server-side metric suite)."""
+
+    @jax.jit
+    def fwd(client, server, xb):
+        return adapter.server_forward(server, adapter.client_forward(client, xb, None))
+
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(fwd(state["client_banks"][0], state["server"], jnp.asarray(x[i : i + batch]))))
+    out = jnp.asarray(np.concatenate(outs, axis=0))
+    return {k: float(v) for k, v in adapter.metrics(out, jnp.asarray(y)).items()}

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    make_covid_ct,
+    make_mura,
+    make_cholesterol,
+    MURA_BODY_PARTS,
+)
+from repro.data.split import split_clients, train_val_test_split
+from repro.data.lm import token_stream, lm_batches

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: naive full-matrix attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: [BH, S, hd] -> [BH, S, hd]."""
+    S = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= jnp.abs(qpos - kpos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

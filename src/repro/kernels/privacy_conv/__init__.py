@@ -1,0 +1,1 @@
+from repro.kernels.privacy_conv.ops import privacy_conv

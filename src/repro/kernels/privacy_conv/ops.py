@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the fused privacy layer kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.privacy_conv.kernel import privacy_conv_pallas
+from repro.kernels.privacy_conv.ref import privacy_conv_ref
+
+
+@partial(jax.jit, static_argnames=("noise_scale", "use_kernel", "interpret"))
+def privacy_conv(x, w, b, key=None, *, noise_scale: float = 0.0,
+                 use_kernel: bool = True, interpret: bool = True):
+    """Fused Conv3x3+ReLU+MaxPool2x2+noise (the paper's privacy layer).
+
+    x: [B, H, W, Cin]; w: [3, 3, Cin, Cout]; b: [Cout].
+    ``use_kernel=False`` falls back to the pure-jnp reference (XLA path).
+    """
+    B, H, W, _ = x.shape
+    Cout = w.shape[-1]
+    if noise_scale > 0.0:
+        assert key is not None
+        noise = jax.random.normal(key, (B, H // 2, W // 2, Cout), jnp.float32)
+    else:
+        noise = jnp.zeros((B, H // 2, W // 2, Cout), jnp.float32)
+    if use_kernel:
+        return privacy_conv_pallas(
+            x, w, b, noise, noise_scale=noise_scale, interpret=interpret
+        )
+    return privacy_conv_ref(x, w, b, noise, noise_scale=noise_scale)

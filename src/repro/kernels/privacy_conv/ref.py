@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused privacy layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def privacy_conv_ref(x, w, b, noise, *, noise_scale: float = 0.0):
+    """Conv3x3(SAME) + bias + ReLU + MaxPool2x2 + noise. x: [B,H,W,Cin]."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b.astype(jnp.float32)
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    if noise_scale > 0.0:
+        y = y + noise_scale * noise.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the selective scan (sequential lax.scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, B, C, A, D):
+    """u, dt: [Bsz, S, di]; B, C: [Bsz, S, st]; A: [di, st]; D: [di]."""
+    u = u.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A[None, None].astype(jnp.float32))
+    dBu = (dt * u)[..., None] * B[:, :, None, :].astype(jnp.float32)
+
+    def step(h, xs):
+        dA_t, dBu_t, C_t = xs
+        h = dA_t * h + dBu_t
+        y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    Bsz, S, di, st = dA.shape
+    h0 = jnp.zeros((Bsz, di, st), jnp.float32)
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0), jnp.moveaxis(C, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None].astype(jnp.float32)
+    return y.astype(u.dtype)

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before the first device query).
+
+Production target: TPU v5e, 256 chips/pod. Single pod = (data=16, model=16);
+multi-pod = (pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default (16,16) / (2,16,16); ``shape`` overrides the (data, model)
+    split (same chip count) — prefill/decode workloads often want a wider
+    data axis than training."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return jax.make_mesh(tuple(shape), axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axis_size(mesh) -> int:
+    return int(
+        __import__("numpy").prod(
+            [mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]
+        )
+    )

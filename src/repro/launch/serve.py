@@ -1,0 +1,84 @@
+"""Serving driver: batched prefill + autoregressive decode with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch demo-11m --batch 4 \
+      --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.lm import token_stream
+from repro.models import model as model_lib
+from repro.models.transformer import ModelOptions
+
+
+def sample_logits(key, logits, temperature: float = 0.8):
+    if temperature <= 0:
+        return jnp.argmax(logits, -1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="demo-11m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    assert not cfg.is_encoder_only, "encoder-only archs have no decode step"
+    key = jax.random.PRNGKey(args.seed)
+    params = model_lib.init_model(key, cfg, jnp.float32)
+    opts = ModelOptions(q_block=min(512, args.prompt_len), kv_block=min(512, args.prompt_len))
+
+    max_seq = args.prompt_len + args.gen
+    stream = token_stream(cfg.vocab_size, args.batch * args.prompt_len + 1, seed=args.seed)
+    prompts = jnp.asarray(
+        stream[: args.batch * args.prompt_len].reshape(args.batch, args.prompt_len)
+    )
+
+    # ---- prefill: feed prompt tokens one window, then fill the KV cache by
+    # replaying through serve_step (prefill-by-decode keeps one cache layout)
+    decode = jax.jit(
+        lambda p, st, tok, pos: model_lib.serve_step(p, cfg, st, tok, pos, opts)
+    )
+    state = model_lib.init_decode_state(cfg, args.batch, max_seq, jnp.float32)
+
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, state = decode(params, state, prompts[:, t : t + 1], jnp.int32(t))
+    t_prefill = time.time() - t0
+
+    # ---- decode loop
+    out_tokens = []
+    tok = sample_logits(key, logits[:, 0], args.temperature)[:, None]
+    t0 = time.time()
+    for t in range(args.prompt_len, max_seq):
+        out_tokens.append(np.asarray(tok))
+        logits, state = decode(params, state, tok, jnp.int32(t))
+        key = jax.random.fold_in(key, t)
+        tok = sample_logits(key, logits[:, 0], args.temperature)[:, None]
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    tps = args.batch * args.gen / t_decode
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill {t_prefill:.2f}s, decode {t_decode:.2f}s -> {tps:.1f} tok/s")
+    print("sample generations (token ids):")
+    for b in range(min(2, args.batch)):
+        print(f"  req{b}: {gen[b][:16].tolist()}...")
+    return {"tokens_per_s": tps, "prefill_s": t_prefill, "decode_s": t_decode}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Builds the jitted step + shapes + shardings for every (arch × shape × mesh).
+
+Three lowering kinds:
+  train   -> the spatio-temporal split train step (client banks over the data
+             axes — every data shard IS a hospital — server trunk TP over
+             `model`, AdamW update, detached cut).
+  prefill -> full forward producing logits (+ the paper's privacy cut inline).
+  decode  -> serve_step: ONE token against a KV-cache/SSM-state of seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import distributed
+from repro.launch.mesh import data_axis_size
+from repro.models import model as model_lib
+from repro.models.transformer import ModelOptions
+from repro.optim import adamw
+from repro.sharding import specs as specs_lib
+from repro.sharding.logical import DEFAULT_RULES, axis_rules
+
+
+class Lowering(NamedTuple):
+    fn: Any                # callable to jit
+    args: tuple            # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+
+
+def production_opts(cfg: ModelConfig, mesh, *, kind: str,
+                    base: Optional[ModelOptions] = None) -> ModelOptions:
+    opts = base or ModelOptions()
+    dsz = data_axis_size(mesh)
+    return dataclasses.replace(
+        opts,
+        moe_chunks=dsz if (cfg.n_experts and kind != "decode") else 1,
+    )
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                opts: Optional[ModelOptions] = None, *, zero1: bool = False,
+                shared_bank: bool = False) -> Lowering:
+    ucfg = distributed.untie(cfg)
+    opts = production_opts(ucfg, mesh, kind="train", base=opts)
+    C = data_axis_size(mesh)  # one client per data shard
+    assert shape.global_batch % C == 0, (shape.global_batch, C)
+    b = shape.global_batch // C
+    opt = adamw(3e-4, weight_decay=0.1)
+    step_fn = distributed.make_llm_split_step(
+        ucfg, opts, opt, n_clients=C, shared_bank=shared_bank
+    )
+
+    def init(key):
+        return distributed.init_split_state(key, cfg, C, opt, shared_bank=shared_bank)
+
+    state_shapes = jax.eval_shape(init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    per_client = model_lib.make_batch_shapes(ucfg, shape, batch_override=b)
+    batch_shapes = {
+        k: jax.ShapeDtypeStruct((C,) + v.shape, v.dtype) for k, v in per_client.items()
+    }
+    rng_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    state_specs = {
+        "client_banks": specs_lib.tree_specs(
+            {"client_banks": state_shapes["client_banks"]}, mesh,
+            banked_client=not shared_bank,
+        )["client_banks"],
+        "server": specs_lib.tree_specs(state_shapes["server"], mesh),
+        "opt": specs_lib.tree_specs(state_shapes["opt"], mesh, zero1=zero1),
+        "step": P(),
+    }
+    batch_sp = specs_lib.batch_specs(batch_shapes, mesh)
+
+    def wrapped(state, batch, rng):
+        with axis_rules(DEFAULT_RULES, mesh):
+            return step_fn(state, batch, rng)
+
+    return Lowering(
+        fn=wrapped,
+        args=(state_shapes, batch_shapes, rng_shape),
+        in_shardings=(_named(state_specs, mesh), _named(batch_sp, mesh), NamedSharding(mesh, P())),
+        out_shardings=(_named(state_specs, mesh), None),
+        kind="train",
+    )
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  opts: Optional[ModelOptions] = None) -> Lowering:
+    opts = production_opts(cfg, mesh, kind="prefill", base=opts)
+    params_shapes = jax.eval_shape(
+        functools.partial(model_lib.init_model, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    batch_shapes = model_lib.make_batch_shapes(cfg, shape)
+    batch_shapes.pop("labels", None)
+    param_specs = specs_lib.tree_specs(params_shapes, mesh)
+    batch_sp = specs_lib.batch_specs(batch_shapes, mesh)
+
+    def wrapped(params, batch):
+        with axis_rules(DEFAULT_RULES, mesh):
+            return model_lib.prefill(params, cfg, batch, opts)
+
+    return Lowering(
+        fn=wrapped,
+        args=(params_shapes, batch_shapes),
+        in_shardings=(_named(param_specs, mesh), _named(batch_sp, mesh)),
+        out_shardings=None,
+        kind="prefill",
+    )
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 opts: Optional[ModelOptions] = None,
+                 weights_2d: Optional[bool] = None) -> Lowering:
+    opts = production_opts(cfg, mesh, kind="decode", base=opts)
+    B = shape.global_batch
+    if weights_2d is None:
+        # B=1 decode idles the data axis for batch; put weight shards on it.
+        # Measured: strong win for dense/MoE/SSM decode, but hybrid (jamba)
+        # regresses on collectives (mixed layer kinds reshard) — excluded.
+        weights_2d = B < data_axis_size(mesh) and cfg.family != "hybrid"
+    params_shapes = jax.eval_shape(
+        functools.partial(model_lib.init_model, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    state_shapes = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, B, shape.seq_len)
+    )
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    param_specs = specs_lib.tree_specs(params_shapes, mesh, weights_2d=weights_2d)
+    state_specs = specs_lib.tree_specs(state_shapes, mesh)
+    tok_spec = specs_lib.batch_specs(tokens, mesh)
+
+    def wrapped(params, state, tokens, pos):
+        with axis_rules(DEFAULT_RULES, mesh):
+            return model_lib.serve_step(params, cfg, state, tokens, pos, opts)
+
+    return Lowering(
+        fn=wrapped,
+        args=(params_shapes, state_shapes, tokens, pos),
+        in_shardings=(
+            _named(param_specs, mesh),
+            _named(state_specs, mesh),
+            _named(tok_spec, mesh),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, _named(state_specs, mesh)),
+        kind="decode",
+    )
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh,
+          opts: Optional[ModelOptions] = None, **kw) -> Lowering:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, opts, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, opts)
+    return build_decode(cfg, shape, mesh, opts)
+
+
+def build_group_probe(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      opts: Optional[ModelOptions] = None) -> Optional[Lowering]:
+    """One scanned-group body, lowered standalone.
+
+    XLA's cost_analysis counts a while-loop body ONCE, so the main lowering
+    under-reports scanned work by a factor ~n_groups. The dry-run compiles
+    this probe and corrects: total = measured + (n_groups-1) * probe.
+    Train probes grad(sum(group_fwd)) wrt (params, activations) so backward
+    FLOPs are included, matching the training scan + its transpose.
+    """
+    from repro.models import transformer
+
+    ucfg = distributed.untie(cfg) if shape.kind == "train" else cfg
+    opts = production_opts(ucfg, mesh, kind=shape.kind, base=opts)
+    n_client, n_prefix, n_groups = transformer.stack_split(ucfg)
+    if n_groups <= 1:
+        return None
+    period = transformer.period_of(ucfg)
+    start = n_client + n_prefix
+
+    params_shapes = jax.eval_shape(
+        functools.partial(model_lib.init_model, cfg=ucfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    grp_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+        params_shapes["server"]["groups"],
+    )
+    grp_specs = specs_lib.tree_specs({"probe": grp_shapes}, mesh)["probe"]
+
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    dt = jnp.dtype(ucfg.dtype)
+    h_shape = jax.ShapeDtypeStruct((B, S, ucfg.d_model), dt)
+    pos_shape = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    h_spec = specs_lib.batch_specs(h_shape, mesh)
+    pos_spec = specs_lib.batch_specs(pos_shape, mesh)
+
+    if shape.kind == "decode":
+        state_shapes = jax.eval_shape(
+            lambda: model_lib.init_decode_state(ucfg, B, shape.seq_len)
+        )
+        grp_state = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            state_shapes["groups"],
+        )
+        st_specs = specs_lib.tree_specs({"probe": grp_state}, mesh)["probe"]
+        pos_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def probe(grp, h, state, pos):
+            with axis_rules(DEFAULT_RULES, mesh):
+                new_state = {}
+                for p in range(period):
+                    h, s = transformer.apply_block_decode(
+                        grp[f"pos{p}"], ucfg, start + p, h, state[f"pos{p}"], pos
+                    )
+                    new_state[f"pos{p}"] = s
+                return h, new_state
+
+        return Lowering(
+            fn=probe,
+            args=(grp_shapes, h_shape, grp_state, pos_scalar),
+            in_shardings=(
+                _named(grp_specs, mesh), _named(h_spec, mesh),
+                _named(st_specs, mesh), NamedSharding(mesh, P()),
+            ),
+            out_shardings=None,
+            kind="probe-decode",
+        )
+
+    def group_fwd(grp, h, positions):
+        with axis_rules(DEFAULT_RULES, mesh):
+            for p in range(period):
+                h, _ = transformer.apply_block(grp[f"pos{p}"], ucfg, start + p, h, positions, opts)
+            return h
+
+    if shape.kind == "prefill":
+        return Lowering(
+            fn=group_fwd,
+            args=(grp_shapes, h_shape, pos_shape),
+            in_shardings=(_named(grp_specs, mesh), _named(h_spec, mesh), _named(pos_spec, mesh)),
+            out_shardings=None,
+            kind="probe-prefill",
+        )
+
+    def probe_train(grp, h, positions):
+        def scalar(gh):
+            g, hh = gh
+            out = group_fwd(g, hh, positions)
+            return jnp.sum(out.astype(jnp.float32))
+
+        return jax.grad(scalar)((grp, h))
+
+    return Lowering(
+        fn=probe_train,
+        args=(grp_shapes, h_shape, pos_shape),
+        in_shardings=(_named(grp_specs, mesh), _named(h_spec, mesh), _named(pos_spec, mesh)),
+        out_shardings=None,
+        kind="probe-train",
+    )

@@ -1,0 +1,10 @@
+from repro.metrics.losses import (
+    bce_with_logits,
+    ce_with_logits,
+    mse,
+    msle,
+    rmsle,
+    smape,
+    binary_accuracy,
+    multiclass_accuracy,
+)

@@ -1,0 +1,61 @@
+"""Losses + evaluation metrics used by the paper (MSLE/RMSLE/sMAPE, Eq. 3-5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bce_with_logits(logits, labels):
+    """Binary cross-entropy. logits [B] or [B,1]; labels float {0,1}."""
+    logits = logits.reshape(labels.shape).astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def ce_with_logits(logits, labels):
+    """Multiclass CE. logits [B, C]; labels int [B]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def mse(pred, target):
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))
+
+
+def msle(pred, target):
+    """Mean squared logarithmic error (paper Eq. 3). Values must be >= 0."""
+    pred = jnp.maximum(pred.astype(jnp.float32), 0.0)
+    target = jnp.maximum(target.astype(jnp.float32), 0.0)
+    return jnp.mean(jnp.square(jnp.log1p(target) - jnp.log1p(pred)))
+
+
+def msle_per_sample(pred, target):
+    pred = jnp.maximum(pred.astype(jnp.float32), 0.0)
+    target = jnp.maximum(target.astype(jnp.float32), 0.0)
+    return jnp.square(jnp.log1p(target) - jnp.log1p(pred))
+
+
+def rmsle(pred, target):
+    """Root MSLE (paper Eq. 4)."""
+    return jnp.sqrt(msle(pred, target))
+
+
+def smape(pred, target):
+    """Symmetric mean absolute percentage error in % (paper Eq. 5)."""
+    pred = pred.astype(jnp.float32)
+    target = target.astype(jnp.float32)
+    denom = jnp.abs(target) + jnp.abs(pred)
+    return 100.0 * jnp.mean(jnp.abs(target - pred) / jnp.maximum(denom, 1e-9))
+
+
+def binary_accuracy(logits, labels):
+    pred = (logits.reshape(labels.shape) > 0).astype(jnp.float32)
+    return jnp.mean((pred == labels.astype(jnp.float32)).astype(jnp.float32))
+
+
+def multiclass_accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

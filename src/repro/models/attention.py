@@ -1,0 +1,213 @@
+"""GQA attention: chunked (flash-style) training/prefill path + KV-cache decode.
+
+The chunked path is the memory-bounded XLA implementation used inside the
+distributed program (Pallas targets TPU and is validated separately in
+interpret mode — see repro.kernels.flash_attention). Block-wise online softmax
+keeps peak activation memory at O(q_block * kv_block) per head instead of
+O(seq^2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.logical import shard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(kk, d, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(kv, d, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    """[q_blk, k_blk] additive mask."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    rel = q_pos[:, None] - k_pos[None, :]
+    if causal:
+        m = jnp.where(rel < 0, NEG_INF, m)
+    if window > 0:
+        m = jnp.where(jnp.abs(rel) >= window, NEG_INF, m)
+    return m
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool, window: int = 0,
+    q_block: int = 1024, kv_block: int = 1024, skip_masked_blocks: bool = False,
+    bf16_probs: bool = False,
+):
+    """Flash-style chunked attention.
+
+    q: [B, S, H, hd]; k, v: [B, S, KV, hd] (GQA: H = KV * G). Returns [B,S,H,hd].
+    With ``skip_masked_blocks`` the strictly-above-diagonal kv blocks of the
+    causal mask are *not computed at all* (two-phase decomposition), halving
+    attention FLOPs — this is a §Perf optimisation, off in the baseline.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    nq = -(-S // q_block)
+    nk = -(-S // kv_block)
+    # pad S to multiples
+    Sq = nq * q_block
+    Sk = nk * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, Sq - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    # [B, nq, qb, KV, G, hd]
+    qg = qp.reshape(B, nq, q_block, KV, G, hd)
+    kg = kp.reshape(B, nk, kv_block, KV, hd)
+    vg = vp.reshape(B, nk, kv_block, KV, hd)
+    valid_k = (jnp.arange(Sk) < S).reshape(nk, kv_block)
+
+    def q_chunk(qi):
+        """qi: scalar index into q blocks; returns [B, qb, KV, G, hd]."""
+        qb = qg[:, qi]  # [B, qb, KV, G, hd]
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj):
+            m_prev, l_prev, acc = carry
+            kb, vb = kg[:, kj], vg[:, kj]  # [B, kb, KV, hd]
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            # scores [B, KV, G, qb, kb]
+            s = jnp.einsum(
+                "bqkgh,bckh->bkgqc", qb.astype(jnp.float32) * scale,
+                kb.astype(jnp.float32),
+            )
+            mask = _block_mask(q_pos, k_pos, causal, window)
+            mask = jnp.where(valid_k[kj][None, :], mask, NEG_INF)
+            s = s + mask[None, None, None]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            # stability math in f32; the PV matmul reads bf16 probabilities
+            # (standard flash practice) — halves the dominant HBM stream
+            pv_dtype = jnp.bfloat16 if bf16_probs else jnp.float32
+            pv = jnp.einsum(
+                "bkgqc,bckh->bkgqh", p.astype(pv_dtype), vb.astype(pv_dtype)
+            ).astype(jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        if skip_masked_blocks and causal and window == 0:
+            # only kv blocks 0..ceil((qi+1)*qb/kb)-1 contribute; bound the scan
+            # by masking is replaced with a fori over a dynamic trip count.
+            n_needed = (qi * q_block + q_block + kv_block - 1) // kv_block
+
+            def fori_body(kj, carry):
+                carry, _ = kv_step(carry, kj)
+                return carry
+
+            (m, l, acc) = jax.lax.fori_loop(0, n_needed, fori_body, (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # [B, KV, G, qb, hd]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # [B, qb, KV, G, hd]
+
+    outs = jax.lax.map(q_chunk, jnp.arange(nq))  # [nq, B, qb, KV, G, hd]
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, Sq, H, hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def attention_forward(
+    params, cfg: ModelConfig, x, positions, *,
+    q_block: int = 1024, kv_block: int = 1024, skip_masked_blocks: bool = False,
+    bf16_probs: bool = False, return_kv: bool = False,
+):
+    """Training / prefill attention. x: [B, S, d]."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = chunked_attention(
+        q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+        q_block=q_block, kv_block=kv_block, skip_masked_blocks=skip_masked_blocks,
+        bf16_probs=bf16_probs,
+    )
+    B, S = x.shape[:2]
+    y = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ------------------------------------------------------------------ decode
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Cache for ONE attention layer. Sliding-window archs clamp to the window."""
+    length = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(params, cfg: ModelConfig, x, cache, pos):
+    """One-token decode. x: [B, 1, d]; cache k/v: [B, L, KV, hd]; pos: scalar.
+
+    Returns (y [B,1,d], new_cache). For sliding-window archs the cache is a
+    ring buffer of size `window`.
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    L = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    slot = (pos % L) if cfg.sliding_window else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bkgh,blkh->bkgl", qg.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    idx = jnp.arange(L)
+    if cfg.sliding_window:
+        valid = (idx <= slot) | (pos >= L)  # ring buffer: all valid once wrapped
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p, v.astype(jnp.float32))
+    y = o.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype) @ params["wo"]
+    return y, {"k": k, "v": v}

@@ -1,0 +1,106 @@
+"""The paper's CNN classifiers (custom COVID-19 model, VGG19 for MURA) in JAX.
+
+Structured for split learning: ``params["client"]`` holds the input conv
+stage(s) — the privacy-preserving layer (Conv2D + MaxPool2D, paper §III-A) —
+and ``params["server"]`` holds the remaining stages + dense head.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import CNNConfig
+from repro.models.layers import dense_init
+
+
+def _init_conv(key, in_ch, out_ch, ksize=3, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    fan_in = in_ch * ksize * ksize
+    return {
+        "w": dense_init(kw, fan_in, (ksize, ksize, in_ch, out_ch), dtype),
+        "b": jnp.zeros((out_ch,), dtype),
+    }
+
+
+def conv2d(p, x, stride=1):
+    """x: [B, H, W, C] NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def max_pool(x, size=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, size, size, 1), "VALID"
+    )
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    keys = iter(jax.random.split(key, 64))
+    in_ch = cfg.in_channels
+    stages = []
+    for filters, repeats in cfg.stages:
+        convs = []
+        for _ in range(repeats):
+            convs.append(_init_conv(next(keys), in_ch, filters, dtype=dtype))
+            in_ch = filters
+        stages.append(convs)
+
+    h, w = cfg.input_hw
+    h, w = h // (2 ** len(cfg.stages)), w // (2 ** len(cfg.stages))
+    flat = h * w * in_ch
+    dense = []
+    d_in = flat
+    for units in cfg.dense_units:
+        kw = next(keys)
+        dense.append({"w": dense_init(kw, d_in, (d_in, units), dtype), "b": jnp.zeros((units,), dtype)})
+        d_in = units
+    out = {"w": dense_init(next(keys), d_in, (d_in, cfg.n_classes), dtype), "b": jnp.zeros((cfg.n_classes,), dtype)}
+
+    cut = cfg.cut_layers
+    return {
+        "client": {"stages": stages[:cut]},
+        "server": {"stages": stages[cut:], "dense": dense, "out": out},
+    }
+
+
+def _run_stage(convs, x):
+    for c in convs:
+        x = jax.nn.relu(conv2d(c, x))
+    return max_pool(x)
+
+
+def client_forward(params, cfg: CNNConfig, x, noise_key=None):
+    """The privacy-preserving layer: conv stage(s) + max-pool (+ noise).
+
+    x: [B, H, W, C]. Returns the feature map shipped to the server — the only
+    thing that ever leaves a hospital.
+    """
+    for convs in params["client"]["stages"]:
+        x = _run_stage(convs, x)
+    if cfg.privacy_noise > 0.0 and noise_key is not None:
+        x = x + cfg.privacy_noise * jax.random.normal(noise_key, x.shape, x.dtype)
+    return x
+
+
+def server_forward(params, cfg: CNNConfig, fmap):
+    """Server trunk: remaining conv stages + dense head. fmap -> logits [B, n_classes]."""
+    x = fmap
+    for convs in params["server"]["stages"]:
+        x = _run_stage(convs, x)
+    x = x.reshape(x.shape[0], -1)
+    for dlay in params["server"]["dense"]:
+        x = jax.nn.relu(x @ dlay["w"] + dlay["b"])
+    o = params["server"]["out"]
+    return x @ o["w"] + o["b"]
+
+
+def forward(params, cfg: CNNConfig, x, noise_key=None, detach_cut=True):
+    fmap = client_forward(params, cfg, x, noise_key)
+    if detach_cut:
+        fmap = jax.lax.stop_gradient(fmap)
+    return server_forward(params, cfg, fmap)

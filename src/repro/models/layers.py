@@ -1,0 +1,81 @@
+"""Shared neural-net building blocks (pure JAX, no flax in env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import shard
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, fan_in: int, shape, dtype=jnp.float32):
+    """LeCun-normal style init used for all projection matrices."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ SwiGLU
+def init_swiglu(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, d_model, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, d_ff, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------------ losses
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits [..., V] (any float dtype), labels int [...]. Mean over mask."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,43 @@
+"""The paper's cholesterol LDL-C regression MLP (LeakyReLU, MSE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLPConfig
+from repro.models.layers import dense_init
+
+
+def init_mlp(key, cfg: MLPConfig, dtype=jnp.float32):
+    dims = [cfg.in_features] + list(cfg.hidden) + [1]
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = [
+        {"w": dense_init(k, dims[i], (dims[i], dims[i + 1]), dtype), "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i, k in enumerate(keys)
+    ]
+    cut = cfg.cut_layers
+    return {"client": {"layers": layers[:cut]}, "server": {"layers": layers[cut:]}}
+
+
+def client_forward(params, cfg: MLPConfig, x, noise_key=None):
+    """Privacy-preserving layer for tabular data: first dense layer + noise."""
+    for lay in params["client"]["layers"]:
+        x = jax.nn.leaky_relu(x @ lay["w"] + lay["b"], 0.01)
+    if cfg.privacy_noise > 0.0 and noise_key is not None:
+        x = x + cfg.privacy_noise * jax.random.normal(noise_key, x.shape, x.dtype)
+    return x
+
+
+def server_forward(params, cfg: MLPConfig, h):
+    layers = params["server"]["layers"]
+    for lay in layers[:-1]:
+        h = jax.nn.leaky_relu(h @ lay["w"] + lay["b"], 0.01)
+    out = layers[-1]
+    return (h @ out["w"] + out["b"])[..., 0]  # [B]
+
+
+def forward(params, cfg: MLPConfig, x, noise_key=None, detach_cut=True):
+    h = client_forward(params, cfg, x, noise_key)
+    if detach_cut:
+        h = jax.lax.stop_gradient(h)
+    return server_forward(params, cfg, h)

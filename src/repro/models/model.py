@@ -1,0 +1,84 @@
+"""Model entry points: init / loss / step functions per (config, shape-kind).
+
+This is the layer the launcher, dry-run, trainers and tests all call.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.layers import softmax_cross_entropy
+from repro.models.transformer import ModelOptions
+
+MOE_AUX_WEIGHT = 0.01
+
+# Stub-frontend sizing (assignment carve-out: frontends deliver embeddings).
+VLM_N_PATCHES = 1024
+
+
+def init_model(key, cfg: ModelConfig, dtype=None):
+    return transformer.init_params(key, cfg, dtype)
+
+
+def make_batch_shapes(
+    cfg: ModelConfig, shape: ShapeConfig, *, batch_override: int = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run / input_specs)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        }
+    if cfg.frontend == "audio_frames":
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_patches":
+        P = min(VLM_N_PATCHES, S // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def loss_fn(
+    params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+    opts: ModelOptions = ModelOptions(), noise_key=None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token LM loss (causal) or per-frame classification (encoder-only)."""
+    logits, moe_aux = transformer.forward(params, cfg, batch, opts, noise_key)
+    labels = batch["labels"]
+    if cfg.is_encoder_only:
+        ce = softmax_cross_entropy(logits, labels)
+    else:
+        # next-token prediction: logits[:, :-1] predicts labels[:, 1:]
+        ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+    loss = ce + MOE_AUX_WEIGHT * moe_aux
+    return loss, {"ce": ce, "moe_aux": moe_aux}
+
+
+def prefill(params, cfg: ModelConfig, batch, opts: ModelOptions = ModelOptions()):
+    """Inference prefill: forward logits only (no labels needed)."""
+    logits, _ = transformer.forward(params, cfg, batch, opts)
+    return logits
+
+
+def serve_step(params, cfg: ModelConfig, state, tokens, pos,
+               opts: ModelOptions = ModelOptions()):
+    """ONE new token against a KV cache / SSM state of seq_len."""
+    return transformer.decode_step(params, cfg, state, tokens, pos, opts)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return transformer.init_decode_state(cfg, batch, max_seq, dtype)

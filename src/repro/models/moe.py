@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with sort-based (capacity-bounded) token dispatch.
+
+TPU-native design: instead of the GShard dense dispatch einsum (O(T^2 k d)
+FLOPs at scale), tokens are routed with an argsort + capacity scatter, the
+expert SwiGLU runs as a batched einsum over [E, C, d] (expert dim sharded over
+the `model` mesh axis = expert parallelism; tensor-parallel-within-expert
+fallback when n_experts < model-axis size), and results scatter back weighted
+by router gates. Aux load-balance loss follows Switch/Mixtral.
+
+Distribution: GSPMD replicates scatter/sort ops with sharded operands (it
+cannot prove the dispatch is shard-local), so under a mesh the dispatch and
+combine run inside a `jax.shard_map` that is MANUAL over the data axes and
+AUTO over `model` — each device sorts and capacity-buffers only its local
+tokens while the expert einsums stay under GSPMD for expert/tensor
+parallelism. Only f32 activations and the f32 router cross the shard_map
+boundary (an XLA CPU bug aborts on bf16 all-reduce promotion of closed-over
+weight grads).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.logical import current_mesh, shard
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d, (d, E), jnp.float32),
+        "w_gate": dense_init(kg, d, (E, d, ff), dtype),
+        "w_up": dense_init(ku, d, (E, d, ff), dtype),
+        "w_down": dense_init(kd, ff, (E, ff, d), dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU lane alignment
+
+
+def _route_and_dispatch(router, cfg: ModelConfig, xf):
+    """xf: [T, d] -> (xe [E, C, d], meta, aux). Pure gather/scatter + router."""
+    T, d = xf.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    logits = xf.astype(jnp.float32) @ router  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    C = _capacity(cfg, T)
+    flat_expert = expert_ids.reshape(-1)  # [T*K]
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    pos_in_expert = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_expert < C
+    dest = jnp.where(keep, se * C + pos_in_expert, E * C)  # overflow -> discard
+
+    gathered = jnp.take(xf, st, axis=0)  # [T*K, d]
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[dest].set(gathered)
+    xe = buf[: E * C].reshape(E, C, d)
+    return xe, (dest, st, sg), aux
+
+
+def _combine(cfg: ModelConfig, ye, meta, T: int):
+    """ye: [E, C, d] -> y [T, d] weighted by router gates."""
+    E = cfg.n_experts
+    C = ye.shape[1]
+    d = ye.shape[-1]
+    dest, st, sg = meta
+    ye_flat = jnp.concatenate([ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    out_rows = jnp.take(ye_flat, dest, axis=0)  # [T*K, d]
+    slot_ok = dest < E * C
+    contrib = out_rows * (sg * slot_ok)[:, None].astype(out_rows.dtype)
+    return jnp.zeros((T, d), ye.dtype).at[st].add(contrib)
+
+
+def _expert_ffn(params, xe):
+    """xe: [..., E, C, d] -> [..., E, C, d].
+
+    No activation constraints here: the weight shardings (expert-parallel
+    [E:model] or TP-within-expert [ff:model]) propagate through the einsums;
+    an explicit constraint would fight whichever fallback is active.
+    """
+    h = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", xe, params["w_gate"]))
+    h = h * jnp.einsum("...ecd,edf->...ecf", xe, params["w_up"])
+    return jnp.einsum("...ecf,efd->...ecd", h, params["w_down"])
+
+
+def moe_forward(
+    params, cfg: ModelConfig, x, chunks: int = 1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    ``chunks`` > 1 dispatches independently per token chunk (aligned with the
+    data mesh axes) so each device sorts/buffers only local tokens.
+    """
+    B, S, d = x.shape
+    T = B * S
+    mesh = current_mesh()
+    data_axes = tuple(
+        a for a in ("pod", "data") if mesh is not None and a in mesh.axis_names
+    )
+    if chunks > 1 and data_axes:
+        assert T % chunks == 0, (T, chunks)
+        Tc = T // chunks
+        xc = x.reshape(chunks, Tc, d)
+        xc = shard(xc, "batch", None, None)
+        dspec = P(data_axes, None, None)
+        d4 = P(data_axes, None, None, None)
+
+        def dispatch_local(router, xl):
+            xe, meta, aux = jax.vmap(
+                lambda xx: _route_and_dispatch(router, cfg, xx)
+            )(xl.astype(jnp.float32))
+            return xe, meta, jax.lax.pmean(jnp.mean(aux), data_axes)
+
+        xe, meta, aux = jax.shard_map(
+            dispatch_local,
+            mesh=mesh,
+            in_specs=(P(), dspec),
+            out_specs=(d4, (P(data_axes, None), P(data_axes, None), P(data_axes, None)), P()),
+            axis_names=set(data_axes),
+            check_vma=False,
+        )(params["router"], xc)
+
+        ye = _expert_ffn(params, xe.astype(x.dtype))  # [chunks, E, C, d], GSPMD-parallel
+
+        def combine_local(ye_l, meta_l):
+            return jax.vmap(lambda yy, dd, ss, gg: _combine(cfg, yy, (dd, ss, gg), Tc))(
+                ye_l.astype(jnp.float32), *meta_l
+            )
+
+        y = jax.shard_map(
+            combine_local,
+            mesh=mesh,
+            in_specs=(d4, (P(data_axes, None), P(data_axes, None), P(data_axes, None))),
+            out_specs=dspec,
+            axis_names=set(data_axes),
+            check_vma=False,
+        )(ye.astype(jnp.float32), meta)
+        return y.reshape(B, S, d).astype(x.dtype), aux
+
+    if chunks > 1:  # no mesh (CPU tests): plain vmap over chunks
+        Tc = T // chunks
+        xc = x.reshape(chunks, Tc, d).astype(jnp.float32)
+        xe, meta, aux = jax.vmap(lambda xx: _route_and_dispatch(params["router"], cfg, xx))(xc)
+        ye = _expert_ffn(params, xe.astype(x.dtype))
+        y = jax.vmap(lambda yy, dd, ss, gg: _combine(cfg, yy, (dd, ss, gg), Tc))(
+            ye.astype(jnp.float32), *meta
+        )
+        return y.reshape(B, S, d).astype(x.dtype), jnp.mean(aux)
+
+    xf = x.reshape(T, d).astype(jnp.float32)
+    xe, meta, aux = _route_and_dispatch(params["router"], cfg, xf)
+    xe = shard(xe, "expert", None, None)
+    ye = _expert_ffn(params, xe.astype(x.dtype))
+    y = _combine(cfg, ye.astype(jnp.float32), meta, T)
+    return y.reshape(B, S, d).astype(x.dtype), aux

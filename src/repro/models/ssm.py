@@ -1,0 +1,147 @@
+"""Mamba-1 selective-state-space block (falcon-mamba / jamba mamba layers).
+
+Training/prefill uses a time scan with the (d_inner x d_state) state carried in
+registers/VMEM (see repro.kernels.selective_scan for the Pallas TPU kernel);
+decode keeps an O(1) recurrent state: (conv ring, ssm state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.logical import shard
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, di, st, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        # u and z projections kept as SEPARATE matrices: a fused [d, 2*di]
+        # matrix splits a model-sharded dim, forcing a collective-permute
+        # reshard of both halves every layer (see experiments/perf_log.md)
+        "in_proj_u": dense_init(ks[0], d, (d, di), dtype),
+        "in_proj_z": dense_init(ks[5], d, (d, di), dtype),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv, (di, cfg.ssm_conv), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, (di, dtr + 2 * st), dtype),
+        "dt_proj": dense_init(ks[3], dtr, (dtr, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B, S, di]; w: [di, K]."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # windows: out[t] = sum_k x[t-K+1+k] * w[:, k]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1], :] * w[None, None, :, k]
+    return out + b
+
+
+def _ssm_scan(u, dt, B_t, C_t, A, D):
+    """Selective scan. u,dt: [B,S,di]; B_t,C_t: [B,S,st]; A: [di,st].
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t ;  y_t = (h_t @ C_t) + D*u_t
+    """
+    dA = jnp.exp(dt[..., None] * A[None, None])          # [B,S,di,st]
+    dBu = (dt * u)[..., None] * B_t[:, :, None, :]       # [B,S,di,st]
+
+    def step(h, inputs):
+        dA_t, dBu_t, C_tt = inputs
+        h = dA_t * h + dBu_t                              # [B,di,st]
+        y = jnp.einsum("bds,bs->bd", h, C_tt)
+        return h, y
+
+    Bsz, S, di, st = dA.shape
+    h0 = jnp.zeros((Bsz, di, st), jnp.float32)
+    xs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dBu, 1, 0),
+        jnp.moveaxis(C_t, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)                    # [S,B,di]
+    return jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+
+
+def _ssm_scan_associative(u, dt, B_t, C_t, A, D):
+    """Parallel prefix (associative scan) variant — §Perf alternative.
+
+    The recurrence h_t = a_t h_{t-1} + b_t composes associatively as
+    (a, b) ∘ (a', b') = (a a', a' b + b'). O(log S) depth instead of O(S).
+    """
+    dA = jnp.exp(dt[..., None] * A[None, None])
+    dBu = (dt * u)[..., None] * B_t[:, :, None, :]
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a, b = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("bsdt,bst->bsd", b, C_t)
+    return y + u * D[None, None]
+
+
+def ssm_forward(params, cfg: ModelConfig, x, *, associative: bool = False):
+    """x: [B, S, d] -> [B, S, d]."""
+    u = x @ params["in_proj_u"]
+    z = x @ params["in_proj_z"]
+    u = shard(u, "batch", "seq", "ssm_inner")
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+
+    proj = u @ params["x_proj"]
+    dt, B_t, C_t = jnp.split(
+        proj.astype(jnp.float32),
+        [cfg.dt_rank, cfg.dt_rank + cfg.ssm_state],
+        axis=-1,
+    )
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    scan_fn = _ssm_scan_associative if associative else _ssm_scan
+    y = scan_fn(u.astype(jnp.float32), dt, B_t, C_t, A, params["D"])
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent step. x: [B, 1, d]."""
+    B = x.shape[0]
+    u = x[:, 0] @ params["in_proj_u"]  # [B, di]
+    z = x[:, 0] @ params["in_proj_z"]
+
+    # conv ring buffer
+    conv_in = jnp.concatenate([state["conv"], u[:, None, :].astype(state["conv"].dtype)], axis=1)
+    w = params["conv_w"]  # [di, K]
+    u_c = jnp.einsum("bkd,dk->bd", conv_in, w) + params["conv_b"]
+    u_c = jax.nn.silu(u_c)
+    new_conv = conv_in[:, 1:]
+
+    proj = u_c @ params["x_proj"]
+    dt, B_t, C_t = jnp.split(
+        proj.astype(jnp.float32), [cfg.dt_rank, cfg.dt_rank + cfg.ssm_state], axis=-1
+    )
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])               # [B,di,st]
+    h = dA * state["h"] + (dt * u_c.astype(jnp.float32))[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, C_t) + u_c.astype(jnp.float32) * params["D"][None]
+    out = (y.astype(x.dtype) * jax.nn.silu(z))[:, None, :] @ params["out_proj"]
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,365 @@
+"""Unified decoder/encoder stack covering all assigned families.
+
+dense / moe : [attn + (SwiGLU | MoE)] x L
+ssm         : [mamba1] x L
+hybrid      : period-8 groups (1 attn : 7 mamba, MoE every other layer) — jamba
+audio       : encoder-only (bidirectional) attention — hubert
+vlm         : dense decoder consuming patch embeddings + tokens — internvl2
+
+Layers are stacked and iterated with ``jax.lax.scan`` over *period groups* so
+HLO size and compile time are O(1) in depth. The split-learning cut
+(= the paper's privacy-preserving layer) partitions the stack into
+``client`` blocks (embedding + first ``cut_layers`` blocks, one bank per
+client) and the ``server`` trunk (prefix remainder + scanned groups + head).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.sharding.logical import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    """Execution knobs (perf levers) — model math is identical across values."""
+
+    q_block: int = 1024
+    kv_block: int = 1024
+    skip_masked_blocks: bool = False  # causal two-phase FLOP skip (fwd-only)
+    bf16_probs: bool = False  # bf16 attention probabilities for the PV matmul
+    # (off by default for exact-reference tests; production_opts enables it)
+    associative_scan: bool = False  # parallel-prefix SSM scan
+    remat: bool = False  # checkpoint each block in the group scan
+    detach_cut: bool = True  # paper's temporal split: no grads into client
+    logits_f32: bool = True
+    moe_chunks: int = 1  # per-shard MoE dispatch (align with data-axis size)
+
+
+# ---------------------------------------------------------------- structure
+def period_of(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = cfg.attn_period
+    if cfg.n_experts > 0:
+        p = max(p, cfg.moe_period) if p % cfg.moe_period == 0 or cfg.moe_period % p == 0 else p * cfg.moe_period
+    # ensure p divides into the layer pattern
+    return p
+
+
+def stack_split(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Return (n_client, n_prefix, n_groups): client blocks, unrolled server
+    prefix blocks, and scanned whole groups of size period_of(cfg)."""
+    period = period_of(cfg)
+    cut = cfg.cut_layers
+    start = -(-cut // period) * period  # first group boundary at/after cut
+    n_groups, rem = divmod(cfg.n_layers - start, period)
+    assert rem == 0, f"{cfg.name}: layers {cfg.n_layers} not group-aligned"
+    return cut, start - cut, n_groups
+
+
+# ------------------------------------------------------------------- init
+def init_block(key, cfg: ModelConfig, layer_idx: int, dtype):
+    kind = cfg.layer_kind(layer_idx)
+    keys = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if kind == "attn":
+        p["attn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["attn"] = attn_mod.init_attention(keys[0], cfg, dtype)
+    else:
+        p["ssm_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ssm"] = ssm_mod.init_ssm(keys[1], cfg, dtype)
+    has_ffn = (kind == "attn" and cfg.d_ff > 0) or (
+        cfg.family == "hybrid" and cfg.d_ff > 0
+    )
+    if has_ffn:
+        p["ffn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.layer_is_moe(layer_idx):
+            p["moe"] = moe_mod.init_moe(keys[2], cfg, dtype)
+        else:
+            from repro.models.layers import init_swiglu
+
+            p["mlp"] = init_swiglu(keys[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_client, n_prefix, n_groups = stack_split(cfg)
+    period = period_of(cfg)
+    k_embed, k_head, k_cli, k_pre, k_grp = jax.random.split(key, 5)
+
+    params: Dict[str, Any] = {
+        "client": {
+            "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+            "blocks": [
+                init_block(k, cfg, i, dtype)
+                for i, k in enumerate(jax.random.split(k_cli, max(n_client, 1))[:n_client])
+            ],
+        },
+        "server": {
+            "prefix": [
+                init_block(k, cfg, n_client + i, dtype)
+                for i, k in enumerate(jax.random.split(k_pre, max(n_prefix, 1))[:n_prefix])
+            ],
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["server"]["lm_head"] = dense_init(
+            k_head, cfg.d_model, (cfg.d_model, cfg.vocab_size), dtype
+        )
+
+    start = n_client + n_prefix  # global index of first scanned layer
+
+    def init_group(k):
+        ks = jax.random.split(k, period)
+        return {f"pos{p}": init_block(ks[p], cfg, start + p, dtype) for p in range(period)}
+
+    if n_groups > 0:
+        gkeys = jax.random.split(k_grp, n_groups)
+        params["server"]["groups"] = jax.vmap(init_group)(gkeys)
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def apply_block(blk, cfg: ModelConfig, layer_idx: int, h, positions, opts: ModelOptions):
+    """Training/prefill block. Returns (h, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    kind = cfg.layer_kind(layer_idx)
+    if kind == "attn":
+        a = attn_mod.attention_forward(
+            blk["attn"], cfg, rms_norm(h, blk["attn_norm"], cfg.norm_eps), positions,
+            q_block=opts.q_block, kv_block=opts.kv_block,
+            skip_masked_blocks=opts.skip_masked_blocks, bf16_probs=opts.bf16_probs,
+        )
+        h = h + a
+    else:
+        s = ssm_mod.ssm_forward(
+            blk["ssm"], cfg, rms_norm(h, blk["ssm_norm"], cfg.norm_eps),
+            associative=opts.associative_scan,
+        )
+        h = h + s
+    if "mlp" in blk:
+        from repro.models.layers import swiglu
+
+        h = h + swiglu(blk["mlp"], rms_norm(h, blk["ffn_norm"], cfg.norm_eps))
+    elif "moe" in blk:
+        y, aux = moe_mod.moe_forward(
+            blk["moe"], cfg, rms_norm(h, blk["ffn_norm"], cfg.norm_eps),
+            chunks=opts.moe_chunks,
+        )
+        h = h + y
+    h = shard(h, "batch", "seq", "embed")
+    return h, aux
+
+
+def apply_block_decode(blk, cfg: ModelConfig, layer_idx: int, h, state, pos):
+    """One-token decode block. Returns (h, new_state)."""
+    kind = cfg.layer_kind(layer_idx)
+    if kind == "attn":
+        a, new_inner = attn_mod.decode_attention(
+            blk["attn"], cfg, rms_norm(h, blk["attn_norm"], cfg.norm_eps), state["attn"], pos
+        )
+        h = h + a
+        new_state = {**state, "attn": new_inner}
+    else:
+        s, new_inner = ssm_mod.ssm_decode_step(
+            blk["ssm"], cfg, rms_norm(h, blk["ssm_norm"], cfg.norm_eps), state["ssm"]
+        )
+        h = h + s
+        new_state = {**state, "ssm": new_inner}
+    if "mlp" in blk:
+        from repro.models.layers import swiglu
+
+        h = h + swiglu(blk["mlp"], rms_norm(h, blk["ffn_norm"], cfg.norm_eps))
+    elif "moe" in blk:
+        y, _ = moe_mod.moe_forward(blk["moe"], cfg, rms_norm(h, blk["ffn_norm"], cfg.norm_eps))
+        h = h + y
+    return h, new_state
+
+
+# ------------------------------------------------------------------ embed
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Token / stub-frontend embedding. Returns (h [B,S,d], positions [B,S])."""
+    embed = params["client"]["embed"]
+    if cfg.frontend == "audio_frames":
+        h = batch["frame_embeds"].astype(embed.dtype)
+    elif cfg.frontend == "vision_patches":
+        tok = embed[batch["tokens"]]
+        h = jnp.concatenate([batch["patch_embeds"].astype(embed.dtype), tok], axis=1)
+    else:
+        h = embed[batch["tokens"]]
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = shard(h, "batch", "seq", "embed")
+    return h, positions
+
+
+def privacy_cut(cfg: ModelConfig, h, opts: ModelOptions, noise_key=None):
+    """The paper's privacy boundary: noise + (temporal split) stop_gradient."""
+    if cfg.privacy_noise > 0.0 and noise_key is not None:
+        h = h + cfg.privacy_noise * jax.random.normal(noise_key, h.shape, h.dtype)
+    if opts.detach_cut:
+        h = jax.lax.stop_gradient(h)
+    return h
+
+
+# ----------------------------------------------------------------- forward
+def client_forward(
+    client_params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    opts: ModelOptions = ModelOptions(),
+    noise_key=None,
+):
+    """The hospital side: embedding + privacy-preserving layer(s) + cut.
+
+    Returns (feature_map [B,S,d], positions, client_moe_aux). The feature map
+    is the ONLY tensor that crosses the trust boundary (paper Alg. 1 line 6).
+    """
+    h, positions = embed_inputs({"client": client_params}, cfg, batch)
+    aux = jnp.zeros((), jnp.float32)
+    for i, blk in enumerate(client_params["blocks"]):
+        h, a = apply_block(blk, cfg, i, h, positions, opts)
+        aux += a
+    h = privacy_cut(cfg, h, opts, noise_key)
+    if opts.detach_cut:
+        # temporal split: no training signal (not even MoE aux) enters the client
+        aux = jax.lax.stop_gradient(aux)
+    return h, positions, aux
+
+
+def server_forward(
+    server_params,
+    cfg: ModelConfig,
+    h,
+    positions,
+    opts: ModelOptions = ModelOptions(),
+    tied_embed=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The centralized-server side: remaining blocks + head (paper Alg. 1 l.10+)."""
+    n_client, n_prefix, n_groups = stack_split(cfg)
+    period = period_of(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    for j, blk in enumerate(server_params["prefix"]):
+        h, a = apply_block(blk, cfg, n_client + j, h, positions, opts)
+        aux += a
+
+    start = n_client + n_prefix
+    if n_groups > 0:
+
+        def group_body(carry, grp):
+            hh, aa = carry
+            for p in range(period):
+                hh, a = apply_block(grp[f"pos{p}"], cfg, start + p, hh, positions, opts)
+                aa += a
+            return (hh, aa), None
+
+        body = jax.checkpoint(group_body) if opts.remat else group_body
+        (h, aux), _ = jax.lax.scan(body, (h, aux), server_params["groups"])
+
+    h = rms_norm(h, server_params["final_norm"], cfg.norm_eps)
+    head = tied_embed.T if cfg.tie_embeddings else server_params["lm_head"]
+    logits = h @ head
+    logits = shard(logits, "batch", "seq", "vocab")
+    if opts.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return logits, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    opts: ModelOptions = ModelOptions(),
+    noise_key=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward (train/prefill). Returns (logits [B,S,V], moe_aux)."""
+    h, positions, aux_c = client_forward(params["client"], cfg, batch, opts, noise_key)
+    logits, aux_s = server_forward(
+        params["server"], cfg, h, positions, opts,
+        tied_embed=params["client"]["embed"] if cfg.tie_embeddings else None,
+    )
+    return logits, aux_c + aux_s
+
+
+# ------------------------------------------------------------------ decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Per-layer decode state pytree, mirroring the client/prefix/groups split."""
+    n_client, n_prefix, n_groups = stack_split(cfg)
+    period = period_of(cfg)
+
+    def layer_state(i):
+        if cfg.layer_kind(i) == "attn":
+            return {"attn": attn_mod.init_kv_cache(cfg, batch, max_seq, dtype)}
+        return {"ssm": ssm_mod.init_ssm_state(cfg, batch)}
+
+    start = n_client + n_prefix
+    state = {
+        "client": [layer_state(i) for i in range(n_client)],
+        "prefix": [layer_state(n_client + j) for j in range(n_prefix)],
+    }
+    if n_groups > 0:
+        group_state = {f"pos{p}": layer_state(start + p) for p in range(period)}
+        state["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), group_state
+        )
+    return state
+
+
+def decode_step(
+    params, cfg: ModelConfig, state, tokens, pos, opts: ModelOptions = ModelOptions()
+):
+    """One decode step. tokens: [B, 1] int32; pos: scalar int32 position.
+
+    Returns (logits [B, 1, V], new_state).
+    """
+    n_client, n_prefix, n_groups = stack_split(cfg)
+    period = period_of(cfg)
+    embed = params["client"]["embed"]
+    h = embed[tokens]
+    h = shard(h, "batch", None, "embed")
+
+    new_state: Dict[str, Any] = {"client": [], "prefix": []}
+    for i, blk in enumerate(params["client"]["blocks"]):
+        h, s = apply_block_decode(blk, cfg, i, h, state["client"][i], pos)
+        new_state["client"].append(s)
+    h = privacy_cut(cfg, h, opts, None)
+
+    for j, blk in enumerate(params["server"]["prefix"]):
+        h, s = apply_block_decode(blk, cfg, n_client + j, h, state["prefix"][j], pos)
+        new_state["prefix"].append(s)
+
+    start = n_client + n_prefix
+    if n_groups > 0:
+
+        def group_body(hh, xs):
+            grp, st = xs
+            new_st = {}
+            for p in range(period):
+                hh, s = apply_block_decode(grp[f"pos{p}"], cfg, start + p, hh, st[f"pos{p}"], pos)
+                new_st[f"pos{p}"] = s
+            return hh, new_st
+
+        h, group_states = jax.lax.scan(
+            group_body, h, (params["server"]["groups"], state["groups"])
+        )
+        new_state["groups"] = group_states
+
+    h = rms_norm(h, params["server"]["final_norm"], cfg.norm_eps)
+    head = (
+        params["client"]["embed"].T if cfg.tie_embeddings else params["server"]["lm_head"]
+    )
+    logits = (h @ head).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    return logits, new_state

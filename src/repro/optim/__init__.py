@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd, apply_updates, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine, constant_schedule

@@ -1,0 +1,89 @@
+"""Hand-rolled optimizers (optax is not available in this environment).
+
+Each optimizer is a (init, update) pair in the optax GradientTransformation
+style so trainers can be optimizer-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_global_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params, step) -> (updates, state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        t = step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["nu"], grads
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"vel": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype), grads, params), state
+        vel = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32), state["vel"], grads
+        )
+        updates = jax.tree.map(lambda v, p: (-lr_t * v).astype(p.dtype), vel, params)
+        return updates, {"vel": vel}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,1 @@
+from repro.roofline.analysis import analyze_lowering, RooflineReport, HW_V5E

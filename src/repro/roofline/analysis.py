@@ -1,0 +1,165 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_total    / (chips * peak_FLOP/s)
+  memory     = HLO_bytes_total    / (chips * HBM_bw)
+  collective = collective_bytes   / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device numbers on the
+SPMD-partitioned module). collective_bytes is parsed from the optimized HLO:
+we sum result-shard sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighting all-reduce 2x (reduce-scatter +
+all-gather on the wire).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+HW_V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(?)([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # ring AR = RS + AG
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type wire bytes (per device) summed over the module."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if op.endswith("-done"):
+            continue
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[op] = out.get(op, 0.0) + nbytes * _WIRE_FACTOR[op]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives_by_type: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    memory_per_device_bytes: Optional[float] = None
+    peak_memory_bytes: Optional[float] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = batch*1."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one token per sequence
+        return 2.0 * n_active * tokens  # forward-only
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens  # forward-only
+    return 6.0 * n_active * tokens  # fwd + bwd
+
+
+def extract_costs(compiled):
+    """(flops, bytes, collective_bytes, colls_by_type) for one executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collective_bytes(compiled.as_text())
+    return flops, nbytes, sum(colls.values()), colls
+
+
+def analyze_lowering(
+    cfg, shape, mesh_name: str, n_devices: int, compiled, hw=HW_V5E,
+    probe_compiled=None, n_groups: int = 0,
+) -> RooflineReport:
+    """``probe_compiled`` is the one-group-body executable used to correct
+    XLA's while-loop-counted-once cost model: X += (n_groups-1) * X_probe."""
+    flops, nbytes, coll_bytes, colls = extract_costs(compiled)
+    if probe_compiled is not None and n_groups > 1:
+        pf, pb, pc, pcolls = extract_costs(probe_compiled)
+        k = n_groups - 1
+        flops += k * pf
+        nbytes += k * pb
+        coll_bytes += k * pc
+        for op, v in pcolls.items():
+            colls[op] = colls.get(op, 0.0) + k * v
+
+    t_compute = flops / hw["peak_flops"]
+    t_memory = nbytes / hw["hbm_bw"]
+    # a v5e chip has 4 usable ICI links on the 2D torus; model per-chip
+    # injection bandwidth as one link (conservative serialized schedule)
+    t_collective = coll_bytes / hw["link_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops_estimate(cfg, shape)
+    total_flops = flops * n_devices
+    ratio = mf / total_flops if total_flops else 0.0
+
+    mem = None
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+        )
+        peak = float(getattr(ma, "temp_size_in_bytes", 0)) + mem
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=coll_bytes,
+        collectives_by_type=colls,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_collective,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_flops_ratio=ratio,
+        memory_per_device_bytes=mem,
+        peak_memory_bytes=peak,
+    )

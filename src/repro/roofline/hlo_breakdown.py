@@ -1,0 +1,75 @@
+"""Per-op breakdown of an HLO dump — the dry-run 'profiler'.
+
+Ranks instructions by (result) bytes and tallies collective traffic per op
+type, telling the §Perf loop WHAT dominates the memory / collective terms.
+
+  PYTHONPATH=src python -m repro.roofline.hlo_breakdown /tmp/step.hlo [--top 20]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# %name = dtype[dims]{layout} opcode(...)
+_INSTR_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^\s]*\s+([\w\-]+)\("
+)
+
+
+def parse_ops(text: str) -> List[Tuple[str, str, int]]:
+    """(name, opcode, result_bytes) per instruction."""
+    out = []
+    for m in _INSTR_RE.finditer(text):
+        name, dtype, dims, opcode = m.groups()
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        for d in dims.split(","):
+            if d:
+                nb *= int(d)
+        out.append((name, opcode, nb))
+    return out
+
+
+def breakdown(text: str, top: int = 20) -> Dict:
+    ops = parse_ops(text)
+    by_opcode: Dict[str, int] = defaultdict(int)
+    for _, opcode, nb in ops:
+        by_opcode[opcode] += nb
+    biggest = sorted(ops, key=lambda o: -o[2])[:top]
+    # while-loop bodies appear once; count loops for context
+    n_while = text.count(" while(")
+    return {
+        "by_opcode": dict(sorted(by_opcode.items(), key=lambda kv: -kv[1])),
+        "biggest_instructions": biggest,
+        "n_while_loops": n_while,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_path")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    with open(args.hlo_path) as f:
+        text = f.read()
+    rep = breakdown(text, args.top)
+    print(f"while loops: {rep['n_while_loops']}")
+    print("\n== result bytes by opcode ==")
+    for op, nb in list(rep["by_opcode"].items())[:25]:
+        print(f"  {op:30s} {nb/1e9:10.3f} GB")
+    print(f"\n== top {args.top} instructions by result bytes ==")
+    for name, opcode, nb in rep["biggest_instructions"]:
+        print(f"  {nb/1e9:8.3f} GB  {opcode:24s} {name[:80]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Logical-axis sharding annotations.
+
+Model code calls ``shard(x, "batch", "seq", "model")`` with *logical* axis
+names; a context-scoped rule table maps logical names onto physical mesh axes
+(or ``None`` = replicated). On CPU smoke tests no rules are installed and the
+annotation is a no-op, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# Default production rule table: batch over (pod, data); tensor-parallel dims
+# over model. "expert" also maps onto model (expert-parallel shares the axis).
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,           # activations keep d_model replicated
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",           # FFN hidden dim
+    "vocab": "model",
+    "expert": "model",       # expert-parallel
+    "expert_ff": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "client": ("pod", "data"),  # per-client parameter banks live on the data axis
+}
+
+
+def current_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Axis], mesh=None):
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev_r
+        _state.mesh = prev_m
+
+
+def logical_to_spec(logical: Sequence[Optional[str]], rules=None, mesh=None) -> P:
+    """Translate logical axis names -> PartitionSpec under `rules`."""
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = mesh if mesh is not None else current_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    out = []
+    for name in logical:
+        ax = rules.get(name) if name else None
+        if ax is not None and mesh_axes is not None:
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a in mesh_axes) or None
+            elif ax not in mesh_axes:
+                ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def _axes_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        ax = (ax,)
+    return int(__import__("numpy").prod([mesh.shape[a] for a in ax]))
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply a with_sharding_constraint if rules are installed; else no-op.
+
+    Axes whose mesh size does not divide the corresponding dim are dropped
+    (replicated) — forcing GSPMD to pad/reshard there triggers involuntary
+    full rematerialization.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical, rules)
+    mesh = current_mesh()
+    if mesh is not None:
+        fixed = []
+        for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+            if ax is not None and dim % _axes_size(mesh, ax) != 0:
+                ax = None
+            fixed.append(ax)
+        spec = P(*fixed)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real (1-device) CPU topology. Only the dry-run
+# (repro.launch.dryrun, run as its own process) forces 512 placeholder devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,73 @@
+"""Differentially-private feature release (beyond-paper: the paper's §V
+future-work item) + non-IID client splits."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dp import DPConfig, clip_per_sample, composed_epsilon, dp_release
+from repro.data.split import split_clients
+
+SETTINGS = settings(max_examples=20, deadline=None)
+
+
+def test_clip_bounds_every_sample():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 4, 2)) * 10
+    c = clip_per_sample(x, 1.0)
+    norms = jnp.linalg.norm(c.reshape(8, -1), axis=-1)
+    assert float(norms.max()) <= 1.0 + 1e-5
+    # small inputs pass through unchanged
+    small = x / float(jnp.linalg.norm(x.reshape(8, -1), axis=-1).max()) * 0.5
+    np.testing.assert_allclose(np.asarray(clip_per_sample(small, 1.0)), np.asarray(small), atol=1e-6)
+
+
+def test_sigma_matches_gaussian_mechanism():
+    dp = DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    expected = 2.0 * math.sqrt(2 * math.log(1.25 / 1e-5)) / 1.0
+    assert abs(dp.sigma - expected) < 1e-9
+
+
+def test_dp_release_noise_scale():
+    dp = DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    x = jnp.zeros((4, 32, 32, 1))
+    out = dp_release(jax.random.PRNGKey(0), x, dp)
+    emp = float(jnp.std(out))
+    assert 0.8 * dp.sigma < emp < 1.2 * dp.sigma
+
+
+@SETTINGS
+@given(st.floats(0.1, 5.0), st.integers(1, 200))
+def test_composition_bounds(eps, t):
+    dp = DPConfig(epsilon=eps, delta=1e-6)
+    rep = composed_epsilon(dp, t)
+    assert rep["basic_epsilon"] == pytest.approx(t * eps)
+    # advanced composition beats basic for small eps and large T
+    if eps <= 0.3 and t >= 50:
+        assert rep["advanced_epsilon"] < rep["basic_epsilon"]
+
+
+def test_stronger_privacy_means_more_noise():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 4))
+    weak = dp_release(jax.random.PRNGKey(2), x, DPConfig(epsilon=10.0))
+    strong = dp_release(jax.random.PRNGKey(2), x, DPConfig(epsilon=0.1))
+    err_weak = float(jnp.mean(jnp.abs(weak - clip_per_sample(x, 1.0))))
+    err_strong = float(jnp.mean(jnp.abs(strong - clip_per_sample(x, 1.0))))
+    assert err_strong > 10 * err_weak
+
+
+def test_label_skew_split_non_iid():
+    n = 3000
+    x = np.arange(n)[:, None].astype(np.float32)
+    y = (np.arange(n) % 2).astype(np.float32)
+    iid = split_clients(x, y, seed=0, label_skew=0.0)
+    skew = split_clients(x, y, seed=0, label_skew=1.0)
+    # conservation holds in both
+    assert sum(len(s[0]) for s in iid) == n == sum(len(s[0]) for s in skew)
+    # IID shards have ~50% positives everywhere; skewed shards diverge
+    iid_rates = [s[1].mean() for s in iid]
+    skew_rates = [s[1].mean() for s in skew]
+    assert max(abs(r - 0.5) for r in iid_rates) < 0.05
+    assert max(abs(r - 0.5) for r in skew_rates) > 0.3

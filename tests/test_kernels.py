@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.privacy_conv.kernel import privacy_conv_pallas
+from repro.kernels.privacy_conv.ref import privacy_conv_ref
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------- privacy conv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,W,Cin,Cout,noise", [(2, 8, 8, 1, 16, 0.0), (1, 32, 32, 3, 8, 0.1),
+                             (2, 16, 24, 4, 32, 0.0), (1, 64, 64, 1, 16, 0.05)]
+)
+def test_privacy_conv_sweep(B, H, W, Cin, Cout, noise, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, H, W, Cin), dtype)
+    w = (jax.random.normal(ks[1], (3, 3, Cin, Cout)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (Cout,)) * 0.1).astype(dtype)
+    nz = jax.random.normal(ks[3], (B, H // 2, W // 2, Cout))
+    got = privacy_conv_pallas(x, w, b, nz, noise_scale=noise)
+    want = privacy_conv_ref(x, w, b, nz, noise_scale=noise)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_privacy_conv_tiled_matches_untiled():
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (1, 32, 16, 2))
+    w = jax.random.normal(ks[1], (3, 3, 2, 8)) * 0.1
+    b = jnp.zeros((8,))
+    nz = jnp.zeros((1, 16, 8, 8))
+    full = privacy_conv_pallas(x, w, b, nz, tile_h=32)
+    tiled = privacy_conv_pallas(x, w, b, nz, tile_h=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-6)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "BH,S,hd,causal,window,qb,kb",
+    [
+        (2, 64, 32, True, 0, 16, 16),
+        (2, 100, 64, True, 0, 32, 16),   # ragged tail
+        (1, 128, 64, False, 0, 64, 32),  # bidirectional (encoder)
+        (2, 96, 32, True, 24, 32, 32),   # sliding window
+        (1, 64, 128, True, 0, 64, 64),
+    ],
+)
+def test_flash_attention_sweep(BH, S, hd, causal, window, qb, kb, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, S, hd), dtype)
+    k = jax.random.normal(ks[1], (BH, S, hd), dtype)
+    v = jax.random.normal(ks[2], (BH, S, hd), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_block=qb, kv_block=kb)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_flash_attention_gqa_wrapper():
+    B, S, H, KV, hd = 2, 64, 8, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    got = flash_attention(q, k, v, q_block=32, kv_block=32)
+    # oracle: repeat kv
+    kr = jnp.repeat(k, H // KV, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vr = jnp.repeat(v, H // KV, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = flash_attention_ref(qr, kr, vr).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------- selective scan
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize(
+    "Bsz,S,di,st,dtile,tc",
+    [(2, 32, 64, 8, 32, 8), (1, 100, 128, 16, 64, 16), (2, 64, 256, 16, 128, 64),
+     (1, 17, 64, 16, 64, 5)],
+)
+def test_selective_scan_sweep(Bsz, S, di, st, dtile, tc, dtype):
+    ks = jax.random.split(KEY, 6)
+    u = jax.random.normal(ks[0], (Bsz, S, di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, di)) * 0.5 - 1).astype(dtype)
+    B = jax.random.normal(ks[2], (Bsz, S, st), dtype)
+    C = jax.random.normal(ks[3], (Bsz, S, st), dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, st)) * 0.3)
+    D = jax.random.normal(ks[5], (di,))
+    got = selective_scan_pallas(u, dt, B, C, A, D, d_tile=dtile, t_chunk=tc)
+    want = selective_scan_ref(u, dt, B, C, A, D)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=1e-5, rtol=1e-4
+    )
+
+
+def test_selective_scan_state_continuity_across_chunks():
+    """Chunked grid must carry state across time chunks, not reset it."""
+    ks = jax.random.split(KEY, 6)
+    Bsz, S, di, st = 1, 64, 32, 8
+    u = jax.random.normal(ks[0], (Bsz, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, di)) * 0.3)
+    B = jax.random.normal(ks[2], (Bsz, S, st))
+    C = jax.random.normal(ks[3], (Bsz, S, st))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, st)) * 0.2)
+    D = jnp.zeros((di,))
+    one_chunk = selective_scan_pallas(u, dt, B, C, A, D, d_tile=32, t_chunk=64)
+    many_chunks = selective_scan_pallas(u, dt, B, C, A, D, d_tile=32, t_chunk=8)
+    np.testing.assert_allclose(np.asarray(one_chunk), np.asarray(many_chunks), atol=1e-5)

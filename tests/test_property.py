@@ -1,0 +1,126 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.tree import tree_global_norm, tree_scale, tree_size
+from repro.core.queue import FeatureQueue
+from repro.core.trainer import SplitTrainConfig, client_batch_sizes
+from repro.data.split import split_clients
+from repro.metrics.losses import msle, rmsle, smape
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+floats = st.floats(min_value=0.01, max_value=1e4, allow_nan=False)
+
+
+@SETTINGS
+@given(st.lists(floats, min_size=2, max_size=16), st.lists(floats, min_size=2, max_size=16))
+def test_smape_symmetric_and_bounded(a, b):
+    n = min(len(a), len(b))
+    x, y = jnp.asarray(a[:n]), jnp.asarray(b[:n])
+    s1, s2 = float(smape(x, y)), float(smape(y, x))
+    assert abs(s1 - s2) < 1e-3  # symmetric
+    assert 0.0 <= s1 <= 100.0 + 1e-6  # bounded (paper Eq. 5 form)
+
+
+@SETTINGS
+@given(st.lists(floats, min_size=2, max_size=16))
+def test_rmsle_is_sqrt_msle_and_zero_on_equal(a):
+    x = jnp.asarray(a)
+    assert float(msle(x, x)) < 1e-10
+    y = x * 1.5
+    assert abs(float(rmsle(x, y)) - float(jnp.sqrt(msle(x, y)))) < 1e-6
+
+
+@SETTINGS
+@given(st.integers(2, 512), st.integers(1, 8))
+def test_clip_by_global_norm_bound(n, seed):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(tree_global_norm(clipped)) <= 1.0 + 1e-4
+    # direction preserved
+    cos = float(
+        jnp.sum(g["a"] * clipped["a"])
+        / (jnp.linalg.norm(g["a"]) * jnp.linalg.norm(clipped["a"]) + 1e-9)
+    )
+    assert cos > 0.999
+
+
+@SETTINGS
+@given(st.integers(10, 500), st.integers(0, 100))
+def test_split_clients_partition_conserves_data(n, seed):
+    x = np.arange(n)[:, None].astype(np.float32)
+    y = np.arange(n).astype(np.float32)
+    shards = split_clients(x, y, shares=(0.7, 0.2, 0.1), seed=seed)
+    total = sum(len(sx) for sx, _ in shards)
+    assert total == n
+    # disjoint: every element appears exactly once
+    seen = np.concatenate([sy for _, sy in shards])
+    assert sorted(seen.tolist()) == sorted(y.tolist())
+
+
+@SETTINGS
+@given(st.integers(3, 256))
+def test_client_batch_sizes_always_positive_and_sum(server_batch):
+    tc = SplitTrainConfig(server_batch=server_batch)
+    sizes = client_batch_sizes(tc)
+    assert sum(sizes) == server_batch
+    assert all(s >= 1 for s in sizes)
+
+
+@SETTINGS
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=50))
+def test_queue_conservation(pushes):
+    q = FeatureQueue(max_size=1000)
+    for i, c in enumerate(pushes):
+        q.push(c, i, i)
+    popped = []
+    while len(q):
+        popped.append(q.pop()[1])
+    assert popped == list(range(len(pushes)))  # FIFO, nothing lost
+    s = q.stats()
+    assert s["pushed"] == s["popped"] == len(pushes)
+
+
+@SETTINGS
+@given(st.integers(1, 6))
+def test_adamw_decreases_quadratic(seed):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros(8)}
+    opt = adamw(0.1)
+    opt_state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for t in range(30):
+        g = jax.grad(loss)(params)
+        up, opt_state = opt.update(g, opt_state, params, jnp.asarray(t))
+        params = apply_updates(params, up)
+    assert float(loss(params)) < l0 * 0.5
+
+
+@SETTINGS
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_tree_utils(n, k):
+    t = {"a": jnp.ones((n,)), "b": [jnp.ones((k, 2))]}
+    assert tree_size(t) == n + 2 * k
+    scaled = tree_scale(t, 3.0)
+    assert float(scaled["a"][0]) == 3.0
+
+
+@SETTINGS
+@given(st.integers(2, 32), st.integers(1, 4))
+def test_softmax_cross_entropy_uniform_bound(v, b):
+    """CE of uniform logits == log(V) exactly — lower bound property."""
+    from repro.models.layers import softmax_cross_entropy
+
+    logits = jnp.zeros((b, v))
+    labels = jnp.zeros((b,), jnp.int32)
+    ce = float(softmax_cross_entropy(logits, labels))
+    assert abs(ce - float(jnp.log(v))) < 1e-5
