@@ -40,7 +40,7 @@ def bench_privacy_conv() -> List[Row]:
     ref = jax.jit(lambda *a: privacy_conv_ref(*a, noise_scale=0.05))
     us = _time(ref, x, w, b, nz)
     err = float(jnp.max(jnp.abs(
-        privacy_conv_pallas(x, w, b, nz, noise_scale=0.05)
+        privacy_conv_pallas(x, w, b, nz, noise_scale=0.05, interpret=True)
         - privacy_conv_ref(x, w, b, nz, noise_scale=0.05))))
     return [("kernel/privacy_conv_64x64", us, f"pallas_vs_ref_maxerr={err:.2e}")]
 

@@ -20,8 +20,8 @@ from repro.configs.paper_models import (
 from repro.core.adapters import cnn_adapter, mlp_adapter
 from repro.core.fedavg import train_fedavg
 from repro.core.trainer import (
-    SplitTrainConfig, client_batch_sizes, evaluate, make_spatio_temporal_step,
-    train_single_client, train_spatio_temporal,
+    SplitTrainConfig, evaluate, fused_client_batch, make_spatio_temporal_step,
+    stack_batches, train_single_client, train_spatio_temporal,
 )
 from repro.data import make_cholesterol, make_covid_ct, make_mura, split_clients, train_val_test_split
 from repro.optim import adamw
@@ -29,15 +29,20 @@ from repro.optim import adamw
 Row = Tuple[str, float, str]
 
 
-def _time_step(step, state, batches, n: int = 5) -> float:
-    """Mean μs per jitted call (post-warmup)."""
+def _time_step(step, state, xs, ys, n: int = 5) -> float:
+    """Mean μs per jitted fused-step call (post-warmup)."""
     rng = jax.random.PRNGKey(0)
-    state, _ = step(state, batches, rng)  # warmup/compile
+    state, _ = step(state, xs, ys, rng)  # warmup/compile
     t0 = time.perf_counter()
     for i in range(n):
-        state, m = step(state, batches, jax.random.fold_in(rng, i))
+        state, m = step(state, xs, ys, jax.random.fold_in(rng, i))
     jax.block_until_ready(m["loss"])
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def _fused_batches(shards, tc):
+    b = fused_client_batch(tc)
+    return stack_batches([(sx[:b], sy[:b]) for sx, sy in shards])
 
 
 def _shards_and_test(x, y):
@@ -68,9 +73,8 @@ def table1_layers_at_client() -> List[Row]:
                                          epochs=6, steps_per_epoch=10)
         acc = evaluate(ad, state, *test)["accuracy"]
         init_state, step = make_spatio_temporal_step(ad, tc, adamw(1e-3))
-        batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
-                   for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
-        us = _time_step(step, init_state(jax.random.PRNGKey(0)), batches)
+        xs, ys = _fused_batches(shards, tc)
+        us = _time_step(step, init_state(jax.random.PRNGKey(0)), xs, ys)
         rows.append((f"table1/L{cut}_at_client", us, f"accuracy={acc:.4f}"))
     return rows
 
@@ -138,9 +142,8 @@ def table7_cholesterol() -> List[Row]:
     single = evaluate(ad, st1, *test)
 
     init_state, step = make_spatio_temporal_step(ad, tc, adamw(3e-3))
-    batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
-               for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
-    us = _time_step(step, init_state(jax.random.PRNGKey(0)), batches)
+    xs, ys = _fused_batches(shards, tc)
+    us = _time_step(step, init_state(jax.random.PRNGKey(0)), xs, ys)
     rows = [("table7/step_time", us, "spatio-temporal step")]
     for k in ("msle", "rmsle", "smape"):
         rows.append((f"table7/{k}", 0.0,

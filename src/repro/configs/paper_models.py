@@ -7,7 +7,7 @@ cholesterol regression MLP (7 tabular features -> LDL-C).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +25,16 @@ class CNNConfig:
     epochs: int = 100
     loss: str = "bce"
     activation: str = "sigmoid_out"
+    # use_kernel routes single-conv client stages through the fused Pallas
+    # privacy kernel (Conv3x3+ReLU+MaxPool2x2+noise in one VMEM pass, so the
+    # pre-pool activation never leaves the chip). Differentiable in e2e mode
+    # via a jax.custom_vjp that backs onto the XLA reference.
+    use_kernel: bool = False
+    # interpret=None auto-selects: real Mosaic lowering when a TPU/GPU
+    # backend is present, Pallas interpreter on CPU. CAVEAT: interpret mode
+    # is a Python emulation — correct but slow; on CPU prefer
+    # use_kernel=False for throughput and keep the kernel for parity tests.
+    interpret: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)

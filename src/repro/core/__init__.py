@@ -11,7 +11,10 @@ from repro.core.queue import FeatureQueue
 from repro.core.trainer import (
     SplitTrainConfig,
     make_spatio_temporal_step,
+    make_looped_step,
     make_single_client_step,
+    make_epoch_runner,
+    device_put_shards,
     train_spatio_temporal,
     train_single_client,
 )

@@ -34,6 +34,24 @@ class SplitAdapter:
     metrics: Callable[[Any, Any], Dict[str, jnp.ndarray]]
 
 
+# Banked (vmapped-over-clients) views used by the fused trainer: every
+# argument gains a leading client axis C — stacked parameter banks
+# [C, ...pytree], batches [C, b, ...], PRNG keys [C, 2].
+def banked_client_forward(adapter: SplitAdapter) -> Callable[..., Any]:
+    """(stacked_banks, xs, noise_keys) -> features [C, b, ...]."""
+    return jax.vmap(adapter.client_forward)
+
+
+def per_client_loss(adapter: SplitAdapter) -> Callable[..., jnp.ndarray]:
+    """(outputs [C, b, ...], labels [C, b, ...]) -> per-client losses [C]."""
+    return jax.vmap(adapter.loss)
+
+
+def per_client_metrics(adapter: SplitAdapter) -> Callable[..., Dict[str, jnp.ndarray]]:
+    """(outputs [C, b, ...], labels [C, b, ...]) -> {metric: [C]}."""
+    return jax.vmap(adapter.metrics)
+
+
 def cnn_adapter(cfg: CNNConfig) -> SplitAdapter:
     if cfg.loss == "bce":
         loss = lambda out, y: bce_with_logits(out, y)

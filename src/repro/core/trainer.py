@@ -1,14 +1,29 @@
 """Fused SPMD trainers for spatio-temporal split learning (paper Alg. 1).
 
-The performance path compiles the whole protocol into one jitted step:
+The hot path compiles the whole protocol into ONE dispatch per epoch:
 
-  * every client runs its privacy-preserving layer on its own shard
-    (per-client parameter banks — the *spatial* split),
-  * feature maps are concatenated — the queue's steady-state batch mix,
-    with per-client batch sizes proportional to data shares (7:2:1),
-  * the server computes the rest of the network and updates ONLY the
-    server parameters in ``detached`` mode (the *temporal* split:
-    stop_gradient at the cut), or both sides in classic ``e2e`` mode.
+  * per-client parameter banks are stacked into a single leading-axis
+    pytree, and the privacy-preserving layer is ``jax.vmap``-ed over that
+    client axis (the *spatial* split becomes a device axis, not a Python
+    loop),
+  * every client contributes a homogeneous per-step batch; the paper's
+    share-weighted (7:2:1) queue mix is applied as per-client loss
+    weights, which equals the seed's ragged concat mix in expectation —
+    and exactly when shares are uniform,
+  * batch sampling happens on device: epoch data lives in padded device
+    arrays and per-step indices come from ``jax.random`` fold-ins, so no
+    per-step host RNG draws or host->device copies remain,
+  * the epoch is a ``jax.lax.scan`` with a donated carry — metrics come
+    back as stacked arrays and are read once per epoch,
+  * ``detached`` mode (the *temporal* split) updates ONLY the server
+    (stop_gradient at the cut); ``e2e`` is classic split learning and
+    differentiates through the client banks — including through the
+    Pallas privacy kernel when ``CNNConfig.use_kernel`` is set (its
+    ``jax.custom_vjp`` backs onto the XLA reference).
+
+``make_looped_step`` preserves the seed per-client Python-loop
+implementation as the numerical reference; the parity tests and
+``benchmarks/trainer_perf.py`` compare the fused engine against it.
 
 A wall-clock-faithful asynchronous queue simulation lives in
 ``repro.core.protocol``; this module is the throughput-oriented equivalent.
@@ -22,8 +37,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
-from repro.core.adapters import SplitAdapter
+from repro.core.adapters import (
+    SplitAdapter,
+    banked_client_forward,
+    per_client_loss,
+    per_client_metrics,
+)
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
 
@@ -38,22 +59,158 @@ class SplitTrainConfig:
 
 
 def client_batch_sizes(tc: SplitTrainConfig) -> List[int]:
-    """Per-step client contributions ∝ data shares, summing to server_batch."""
-    raw = [s * tc.server_batch for s in tc.data_shares]
-    sizes = [max(1, int(r)) for r in raw]
-    # fix rounding drift onto the largest client
-    sizes[int(np.argmax(tc.data_shares))] += tc.server_batch - sum(sizes)
+    """Per-step client contributions ∝ data shares, summing to server_batch.
+
+    Largest-remainder apportionment. Every client gets ≥ 1 sample whenever
+    ``server_batch >= n_clients`` (the seed's drift correction could push
+    the LARGEST client to a 0-size batch for tiny server batches, e.g.
+    server_batch=2 with shares (0.7, 0.2, 0.1)).
+    """
+    shares = tc.data_shares
+    n = len(shares)
+    total = float(sum(shares))
+    raw = [s / total * tc.server_batch for s in shares]
+    sizes = [int(r) for r in raw]
+    by_remainder = sorted(
+        range(n), key=lambda j: (raw[j] - sizes[j], shares[j]), reverse=True
+    )
+    for j in by_remainder[: tc.server_batch - sum(sizes)]:
+        sizes[j] += 1
+    if tc.server_batch >= n:
+        while any(s == 0 for s in sizes):
+            sizes[max(range(n), key=lambda j: sizes[j])] -= 1
+            sizes[sizes.index(0)] += 1
     return sizes
 
 
+def fused_client_batch(tc: SplitTrainConfig) -> int:
+    """Homogeneous per-client batch for the fused engine (the vmapped client
+    axis needs one shape); the share mix becomes loss weights instead of
+    ragged batch sizes — see ``client_weights``."""
+    return max(1, tc.server_batch // tc.n_clients)
+
+
+def client_weights(tc: SplitTrainConfig) -> jnp.ndarray:
+    """Normalized per-client loss weights reproducing the queue's
+    share-proportional steady-state batch mix."""
+    w = jnp.asarray(tc.data_shares, jnp.float32)
+    return w / jnp.sum(w)
+
+
+def stack_batches(
+    batches: Sequence[Tuple[Any, Any]]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """List of equal-size per-client (x, y) -> stacked ([C, b, ...], [C, b])."""
+    xs = jnp.stack([jnp.asarray(x) for x, _ in batches])
+    ys = jnp.stack([jnp.asarray(y) for _, y in batches])
+    return xs, ys
+
+
 # --------------------------------------------------------------------- steps
+def _make_fused(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
+    """Shared core of the fused engine: (init_state, unjitted step_core)."""
+    detached = tc.mode == "detached"
+    weights = client_weights(tc)
+    fwd_banked = banked_client_forward(adapter)
+    loss_banked = per_client_loss(adapter)
+    metrics_banked = per_client_metrics(adapter)
+
+    def init_state(key):
+        k0, *cks = jax.random.split(key, tc.n_clients + 1)
+        ref = adapter.init(k0)
+        server_params = ref["server"]
+        # same per-client keys as the looped path, stacked leaf-wise
+        banks = [adapter.init(k)["client"] for k in cks]
+        client_banks = jax.tree.map(lambda *xs: jnp.stack(xs), *banks)
+        trainable = server_params if detached else (client_banks, server_params)
+        # optimizer state lives in the FLAT domain: one fused buffer per
+        # moment instead of a tree of tiny per-leaf ops (the leaf-wise
+        # clip+update chain dominates small-model steps on CPU)
+        return {
+            "client_banks": client_banks,
+            "server": server_params,
+            "opt": opt.init(ravel_pytree(trainable)[0]),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def loss_from(client_banks, server_params, xs, ys, noise_keys):
+        feats = fwd_banked(client_banks, xs, noise_keys)  # [C, b, ...]
+        if detached:
+            feats = jax.lax.stop_gradient(feats)
+        c, b = feats.shape[0], feats.shape[1]
+        fcat = feats.reshape((c * b,) + feats.shape[2:])
+        out = adapter.server_forward(server_params, fcat)
+        out_cb = out.reshape((c, b) + out.shape[1:])
+        loss = jnp.sum(weights * loss_banked(out_cb, ys))
+        return loss, (out_cb, ys)
+
+    def trainable_of(state):
+        return state["server"] if detached else (state["client_banks"], state["server"])
+
+    def with_trainable(state, trainable, new_opt):
+        if detached:
+            return {**state, "server": trainable, "opt": new_opt,
+                    "step": state["step"] + 1}
+        cb, sp = trainable
+        return {**state, "client_banks": cb, "server": sp, "opt": new_opt,
+                "step": state["step"] + 1}
+
+    def step_flat(flat, opt_state, step, banks, unravel, xs, ys, rng):
+        """One fused step entirely in the FLAT parameter domain: the model
+        unravels the single trainable buffer (slices fuse into the forward),
+        the gradient comes back flat, and clip+update are a handful of
+        whole-buffer ops instead of a tree of tiny per-leaf ops."""
+        noise_keys = jax.random.split(rng, tc.n_clients)
+
+        def lf(fl):
+            if detached:
+                return loss_from(banks, unravel(fl), xs, ys, noise_keys)
+            cb, sp = unravel(fl)
+            return loss_from(cb, sp, xs, ys, noise_keys)
+
+        (loss, (out, ycb)), flat_grads = jax.value_and_grad(lf, has_aux=True)(flat)
+        # same math as the seed's leaf-wise clip_by_global_norm + update,
+        # fp32-reassociated
+        gnorm = jnp.sqrt(jnp.sum(jnp.square(flat_grads)))
+        scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-9))
+        updates, new_opt = opt.update(flat_grads * scale, opt_state, flat, step)
+        # share-weighted per-client means: equals the seed's concat-mix for
+        # linear metrics; nonlinear aggregates (rmsle, smape) become
+        # weighted per-client means.
+        per = metrics_banked(out, ycb)
+        metrics = {k: jnp.sum(weights * v) for k, v in per.items()}
+        metrics["grad_norm"] = gnorm
+        return flat + updates, new_opt, metrics
+
+    def step_core(state, xs, ys, rng):
+        flat, unravel = ravel_pytree(trainable_of(state))
+        new_flat, new_opt, metrics = step_flat(
+            flat, state["opt"], state["step"], state["client_banks"], unravel,
+            xs, ys, rng,
+        )
+        return with_trainable(state, unravel(new_flat), new_opt), metrics
+
+    return init_state, step_core, trainable_of, with_trainable, step_flat
+
+
 def make_spatio_temporal_step(
     adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
 ):
-    """Returns (init_state, step). ``step(state, batches, rng)`` where
-    ``batches`` is a list of (x_c, y_c) — one per client, sizes per
-    ``client_batch_sizes`` — and updates server (+client in e2e) params."""
+    """The fused engine step. Returns (init_state, step) with
+    ``step(state, xs, ys, rng)`` where ``xs: [C, b, ...]``, ``ys: [C, b, ...]``
+    are stacked per-client batches of homogeneous size
+    ``fused_client_batch(tc)`` (see ``stack_batches``)."""
+    init_state, step_core, *_ = _make_fused(adapter, tc, opt)
+    return init_state, jax.jit(step_core)
 
+
+def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
+    """The seed per-client Python-loop step (reference implementation).
+
+    ``step(state, batches, rng)`` with ``batches`` a list of (x_c, y_c),
+    sizes per ``client_batch_sizes``. Kept for parity tests and as the
+    baseline in ``benchmarks/trainer_perf.py``.
+    """
     detached = tc.mode == "detached"
 
     def init_state(key):
@@ -61,9 +218,7 @@ def make_spatio_temporal_step(
         ref = adapter.init(k0)
         server_params = ref["server"]
         client_banks = [adapter.init(k)["client"] for k in cks]
-        trainable = (
-            server_params if detached else (client_banks, server_params)
-        )
+        trainable = server_params if detached else (client_banks, server_params)
         return {
             "client_banks": client_banks,
             "server": server_params,
@@ -129,20 +284,134 @@ def make_single_client_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Op
 
 
 # ------------------------------------------------------------------- loops
+def device_put_shards(
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stack ragged per-client shards into padded device arrays.
+
+    Returns (data_x [C, N_max, ...], data_y [C, N_max, ...], lens [C]).
+    Float padding is NaN on purpose: the on-device sampler draws indices in
+    [0, lens[c]), so any bug that reads padding poisons the loss visibly.
+    """
+    assert all(len(x) > 0 for x, _ in shards), "empty client shard"
+    n_max = max(len(x) for x, _ in shards)
+
+    def pad(a):
+        a = np.asarray(a)
+        if len(a) == n_max:
+            return a
+        fill = np.nan if np.issubdtype(a.dtype, np.floating) else 0
+        p = np.full((n_max - len(a),) + a.shape[1:], fill, a.dtype)
+        return np.concatenate([a, p], axis=0)
+
+    data_x = jnp.asarray(np.stack([pad(x) for x, _ in shards]))
+    data_y = jnp.asarray(np.stack([pad(y) for _, y in shards]))
+    lens = jnp.asarray([len(x) for x, _ in shards], jnp.int32)
+    return data_x, data_y, lens
+
+
+def make_epoch_runner(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    steps_per_epoch: int,
+    *,
+    unroll: int = 8,
+    mode: str = "scan",
+):
+    """Returns (init_state, run_epoch). ``run_epoch(state, data_x, data_y,
+    lens, epoch_key)`` runs ``steps_per_epoch`` fused steps with all batch
+    sampling on device (one randint for every step's indices, one split for
+    every step's noise key — no per-step host RNG or host->device copies)
+    and returns (new_state, metrics) with each metric stacked over steps.
+
+    ``mode="scan"`` (default): the whole epoch is ONE jitted ``lax.scan``
+    dispatch with the carry donated and the trainable pytree flattened into
+    a single scan-carried buffer; ``unroll`` amortizes XLA's per-iteration
+    while-loop overhead. CAVEAT: XLA:CPU compiles loop bodies without the
+    parallel task scheduler, so on CPU the scan only pays off for small
+    per-step compute — use ``mode="stepwise"`` (one donated-state dispatch
+    per step, sampling still on device) for heavy models on CPU.
+    ``train_spatio_temporal`` picks automatically."""
+    assert mode in ("scan", "stepwise"), mode
+    init_state, step_core, trainable_of, with_trainable, step_flat = _make_fused(
+        adapter, tc, opt
+    )
+    c, b = tc.n_clients, fused_client_batch(tc)
+    take = jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0))
+
+    @jax.jit
+    def sample_plan(lens, epoch_key):
+        k_idx, k_noise = jax.random.split(epoch_key)
+        idx = jax.random.randint(
+            k_idx, (steps_per_epoch, c, b), 0, lens[None, :, None]
+        )
+        return idx, jax.random.split(k_noise, steps_per_epoch)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run_epoch_scan(state, data_x, data_y, lens, epoch_key):
+        idx, step_keys = sample_plan(lens, epoch_key)
+        flat, unravel = ravel_pytree(trainable_of(state))
+        banks = state["client_banks"]  # scan-invariant in detached mode
+
+        def body(carry, inp):
+            fl, opt_state, step = carry
+            idx_t, key_t = inp
+            fl, opt_state, metrics = step_flat(
+                fl, opt_state, step, banks, unravel,
+                take(data_x, idx_t), take(data_y, idx_t), key_t,
+            )
+            return (fl, opt_state, step + 1), metrics
+
+        (flat, opt_state, step), ms = jax.lax.scan(
+            body, (flat, state["opt"], state["step"]), (idx, step_keys),
+            unroll=min(unroll, steps_per_epoch),
+        )
+        new_state = with_trainable(state, unravel(flat), opt_state)
+        new_state["step"] = step
+        return new_state, ms
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def step_once(state, data_x, data_y, idx_t, key_t):
+        return step_core(state, take(data_x, idx_t), take(data_y, idx_t), key_t)
+
+    def run_epoch_stepwise(state, data_x, data_y, lens, epoch_key):
+        idx, step_keys = sample_plan(lens, epoch_key)
+        ms = []
+        for t in range(steps_per_epoch):
+            state, m = step_once(state, data_x, data_y, idx[t], step_keys[t])
+            ms.append(m)
+        return state, {k: jnp.stack([m[k] for m in ms]) for k in ms[0]}
+
+    return init_state, (run_epoch_scan if mode == "scan" else run_epoch_stepwise)
+
+
 def _epoch_batches(
     rng: np.random.Generator,
     shards: Sequence[Tuple[np.ndarray, np.ndarray]],
     sizes: Sequence[int],
     steps: int,
 ):
-    """Sample per-client batches (with replacement for small clients —
-    matching queue arrival where a small hospital's data recirculates)."""
+    """Seed host-side sampler (kept for the looped reference path): one
+    np.random draw + host->device copy per client per step."""
     for _ in range(steps):
         batch = []
         for (x, y), b in zip(shards, sizes):
             idx = rng.integers(0, len(x), size=b)
             batch.append((jnp.asarray(x[idx]), jnp.asarray(y[idx])))
         yield batch
+
+
+def _auto_epoch_mode(shards, tc: SplitTrainConfig) -> str:
+    """scan on accelerators; on CPU only while the per-step input volume is
+    small enough that XLA:CPU's serial while-loop codegen still wins over
+    per-step dispatch (heavy bodies lose their intra-op parallelism there)."""
+    if jax.default_backend() in ("tpu", "gpu"):
+        return "scan"
+    elems = tc.n_clients * fused_client_batch(tc) * int(
+        np.prod(np.asarray(shards[0][0]).shape[1:])
+    )
+    return "scan" if elems <= 32768 else "stepwise"
 
 
 def train_spatio_temporal(
@@ -155,19 +424,21 @@ def train_spatio_temporal(
     steps_per_epoch: int,
     seed: int = 0,
     eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+    epoch_mode: Optional[str] = None,
 ) -> Tuple[Any, List[Dict[str, float]]]:
     assert len(shards) == tc.n_clients
-    init_state, step = make_spatio_temporal_step(adapter, tc, opt)
-    state = init_state(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    sizes = client_batch_sizes(tc)
+    data_x, data_y, lens = device_put_shards(shards)
+    init_state, run_epoch = make_epoch_runner(
+        adapter, tc, opt, steps_per_epoch,
+        mode=epoch_mode or _auto_epoch_mode(shards, tc),
+    )
+    root = jax.random.PRNGKey(seed)
+    state = init_state(root)
     history = []
     for ep in range(epochs):
-        ms = []
-        for batches in _epoch_batches(rng, shards, sizes, steps_per_epoch):
-            state, m = step(state, batches, jax.random.PRNGKey(rng.integers(1 << 31)))
-            ms.append(m)
-        rec = {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]}
+        state, ms = run_epoch(state, data_x, data_y, lens, jax.random.fold_in(root, ep + 1))
+        ms = jax.device_get(ms)  # single readout per epoch
+        rec = {k: float(np.mean(v)) for k, v in ms.items()}
         rec["epoch"] = ep
         if eval_fn is not None:
             rec.update({f"val_{k}": v for k, v in eval_fn(state).items()})
@@ -195,6 +466,11 @@ def train_single_client(
 
 def evaluate(adapter: SplitAdapter, state, x, y, batch: int = 512) -> Dict[str, float]:
     """Full-model eval using client bank 0 (server-side metric suite)."""
+    banks = state["client_banks"]
+    if isinstance(banks, (list, tuple)):  # looped-path state
+        client0 = banks[0]
+    else:  # fused-path state: stacked leading client axis
+        client0 = jax.tree.map(lambda a: a[0], banks)
 
     @jax.jit
     def fwd(client, server, xb):
@@ -202,6 +478,6 @@ def evaluate(adapter: SplitAdapter, state, x, y, batch: int = 512) -> Dict[str, 
 
     outs = []
     for i in range(0, len(x), batch):
-        outs.append(np.asarray(fwd(state["client_banks"][0], state["server"], jnp.asarray(x[i : i + batch]))))
+        outs.append(np.asarray(fwd(client0, state["server"], jnp.asarray(x[i : i + batch]))))
     out = jnp.asarray(np.concatenate(outs, axis=0))
     return {k: float(v) for k, v in adapter.metrics(out, jnp.asarray(y)).items()}

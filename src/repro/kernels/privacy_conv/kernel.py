@@ -45,9 +45,18 @@ def _kernel(x_ref, w_ref, b_ref, noise_ref, o_ref, *, tile_h: int, W: int,
     o_ref[0] = pooled.astype(o_ref.dtype)
 
 
+def resolve_interpret(interpret):
+    """None = auto: compile for real on TPU/GPU backends, fall back to the
+    (slow but correct) Pallas interpreter on CPU, where Mosaic can't lower."""
+    if interpret is None:
+        return jax.default_backend() not in ("tpu", "gpu")
+    return interpret
+
+
 def privacy_conv_pallas(x, w, b, noise, *, noise_scale: float = 0.0,
-                        tile_h: int = 0, interpret: bool = True):
+                        tile_h: int = 0, interpret: bool | None = None):
     """x: [B, H, W, Cin] -> [B, H/2, W/2, Cout]. H, W must be even."""
+    interpret = resolve_interpret(interpret)
     B, H, W, Cin = x.shape
     Cout = w.shape[-1]
     assert H % 2 == 0 and W % 2 == 0, (H, W)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_models import CNNConfig
-from repro.models.layers import dense_init
+from repro.kernels.privacy_conv.ops import privacy_conv
+from repro.models.layers import add_privacy_noise, dense_init
 
 
 def _init_conv(key, in_ch, out_ch, ksize=3, dtype=jnp.float32):
@@ -33,7 +34,37 @@ def conv2d(p, x, stride=1):
     return y + p["b"]
 
 
+def conv2d_taps(p, x):
+    """Stride-1 SAME conv as one matmul per kernel tap (the Pallas privacy
+    kernel's decomposition). einsum lowers to batched GEMM, which vmaps
+    cleanly over the fused trainer's stacked-client-bank axis — XLA:CPU's
+    grouped-conv lowering for a vmapped `conv_general_dilated` is an order
+    of magnitude slower there. Client-side only: the server trunk is never
+    vmapped and a native conv has the cheaper backward."""
+    kh, kw = p["w"].shape[:2]
+    ph, pw = kh // 2, kw // 2
+    h, w = x.shape[-3], x.shape[-2]
+    xp = jnp.pad(x, ((0, 0),) * (x.ndim - 3) + ((ph, ph), (pw, pw), (0, 0)))
+    y = None
+    for di in range(kh):
+        for dj in range(kw):
+            tap = jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(xp, di, di + h, axis=-3), dj, dj + w, axis=-2
+            )
+            t = jnp.einsum("...hwi,io->...hwo", tap, p["w"][di, dj])
+            y = t if y is None else y + t
+    return y + p["b"]
+
+
 def max_pool(x, size=2):
+    """Non-overlapping max-pool. When the spatial dims divide the window the
+    pool is a reshape+max (the Pallas kernel's scheme) — its VJP is a cheap
+    equality mask, where `reduce_window`'s SelectAndScatter backward is a
+    serial scatter on XLA:CPU that dominates small-model training steps."""
+    h, w = x.shape[-3], x.shape[-2]
+    if h % size == 0 and w % size == 0:
+        shape = x.shape[:-3] + (h // size, size, w // size, size, x.shape[-1])
+        return jnp.max(x.reshape(shape), axis=(-4, -2))
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, size, size, 1), "VALID"
     )
@@ -68,9 +99,9 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict[str, Any]:
     }
 
 
-def _run_stage(convs, x):
+def _run_stage(convs, x, conv=conv2d):
     for c in convs:
-        x = jax.nn.relu(conv2d(c, x))
+        x = jax.nn.relu(conv(c, x))
     return max_pool(x)
 
 
@@ -79,11 +110,29 @@ def client_forward(params, cfg: CNNConfig, x, noise_key=None):
 
     x: [B, H, W, C]. Returns the feature map shipped to the server — the only
     thing that ever leaves a hospital.
+
+    With ``cfg.use_kernel`` every single-conv stage runs through the fused
+    Pallas kernel (conv+ReLU+pool+noise in one VMEM pass); the final stage
+    fuses the Gaussian draw on-chip so the kernel and XLA paths see the
+    exact same noise (same key, same post-pool shape).
     """
-    for convs in params["client"]["stages"]:
-        x = _run_stage(convs, x)
-    if cfg.privacy_noise > 0.0 and noise_key is not None:
-        x = x + cfg.privacy_noise * jax.random.normal(noise_key, x.shape, x.dtype)
+    stages = params["client"]["stages"]
+    scale = cfg.privacy_noise if noise_key is not None else 0.0
+    for si, convs in enumerate(stages):
+        last = si == len(stages) - 1
+        if cfg.use_kernel and len(convs) == 1:
+            x = privacy_conv(
+                x, convs[0]["w"], convs[0]["b"],
+                noise_key if (last and scale > 0.0) else None,
+                noise_scale=scale if last else 0.0,
+                interpret=cfg.interpret,
+            )
+        else:
+            x = _run_stage(convs, x, conv=conv2d_taps)
+            if last:
+                x = add_privacy_noise(x, scale, noise_key)
+    if not stages:
+        x = add_privacy_noise(x, scale, noise_key)
     return x
 
 

@@ -18,6 +18,18 @@ def embed_init(key, shape, dtype=jnp.float32):
     return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
 
 
+# ---------------------------------------------------------------- privacy
+def add_privacy_noise(x, scale: float, key):
+    """The paper's §III-A Gaussian feature perturbation, shared by the CNN
+    and MLP privacy-preserving layers. The fused Pallas kernel
+    (``repro.kernels.privacy_conv``) draws the SAME noise (same key, same
+    post-pool shape) on-chip, so kernel and XLA paths match bit-for-bit in
+    distribution."""
+    if scale <= 0.0 or key is None:
+        return x
+    return x + scale * jax.random.normal(key, x.shape, x.dtype)
+
+
 # ------------------------------------------------------------------- norms
 def rms_norm(x, weight, eps: float = 1e-5):
     dtype = x.dtype

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_models import MLPConfig
-from repro.models.layers import dense_init
+from repro.models.layers import add_privacy_noise, dense_init
 
 
 def init_mlp(key, cfg: MLPConfig, dtype=jnp.float32):
@@ -23,9 +23,7 @@ def client_forward(params, cfg: MLPConfig, x, noise_key=None):
     """Privacy-preserving layer for tabular data: first dense layer + noise."""
     for lay in params["client"]["layers"]:
         x = jax.nn.leaky_relu(x @ lay["w"] + lay["b"], 0.01)
-    if cfg.privacy_noise > 0.0 and noise_key is not None:
-        x = x + cfg.privacy_noise * jax.random.normal(noise_key, x.shape, x.dtype)
-    return x
+    return add_privacy_noise(x, cfg.privacy_noise, noise_key)
 
 
 def server_forward(params, cfg: MLPConfig, h):

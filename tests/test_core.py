@@ -14,8 +14,8 @@ from repro.core.inversion import inversion_attack_report
 from repro.core.protocol import run_protocol
 from repro.core.queue import FeatureQueue
 from repro.core.trainer import (
-    SplitTrainConfig, client_batch_sizes, evaluate,
-    train_single_client, train_spatio_temporal,
+    SplitTrainConfig, client_batch_sizes, evaluate, fused_client_batch,
+    stack_batches, train_single_client, train_spatio_temporal,
 )
 from repro.data import make_cholesterol, make_covid_ct, split_clients, train_val_test_split
 from repro.optim import adamw
@@ -54,6 +54,20 @@ def test_client_batch_sizes_sum_and_proportion():
     assert sum(sizes) == 64 and sizes[0] > sizes[1] > sizes[2] >= 1
 
 
+def test_client_batch_sizes_small_batches():
+    """Seed regression: drift correction drove the LARGEST client to a
+    0-size batch for tiny server batches (e.g. server_batch=2, 7:2:1)."""
+    for sb in range(2, 17):
+        tc = SplitTrainConfig(server_batch=sb)
+        sizes = client_batch_sizes(tc)
+        assert sum(sizes) == sb, (sb, sizes)
+        assert all(s >= 0 for s in sizes), (sb, sizes)
+        assert sizes[0] >= max(sizes[1:]) >= 0, (sb, sizes)
+        assert sizes[0] >= 1, (sb, sizes)
+        if sb >= tc.n_clients:  # everyone participates once feasible
+            assert all(s >= 1 for s in sizes), (sb, sizes)
+
+
 def test_spatio_temporal_detached_never_updates_clients():
     x, y = make_cholesterol(600, seed=0)
     shards = split_clients(x, y)
@@ -64,9 +78,9 @@ def test_spatio_temporal_detached_never_updates_clients():
     init_state, step = make_spatio_temporal_step(ad, tc, adamw(1e-2))
     state = init_state(jax.random.PRNGKey(0))
     before = jax.tree.map(jnp.copy, state["client_banks"])
-    batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
-               for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
-    state, metrics = step(state, batches, jax.random.PRNGKey(1))
+    b = fused_client_batch(tc)
+    xs, ys = stack_batches([(sx[:b], sy[:b]) for sx, sy in shards])
+    state, metrics = step(state, xs, ys, jax.random.PRNGKey(1))
     for b0, b1 in zip(jax.tree.leaves(before), jax.tree.leaves(state["client_banks"])):
         np.testing.assert_array_equal(np.asarray(b0), np.asarray(b1))
     assert jnp.isfinite(metrics["loss"])
@@ -82,9 +96,9 @@ def test_e2e_mode_updates_clients():
     init_state, step = make_spatio_temporal_step(ad, tc, adamw(1e-2))
     state = init_state(jax.random.PRNGKey(0))
     before = jax.tree.map(jnp.copy, state["client_banks"])
-    batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b]))
-               for (sx, sy), b in zip(shards, client_batch_sizes(tc))]
-    state, _ = step(state, batches, jax.random.PRNGKey(1))
+    b = fused_client_batch(tc)
+    xs, ys = stack_batches([(sx[:b], sy[:b]) for sx, sy in shards])
+    state, _ = step(state, xs, ys, jax.random.PRNGKey(1))
     moved = sum(
         float(jnp.sum(jnp.abs(a - b)))
         for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(state["client_banks"]))
@@ -93,15 +107,21 @@ def test_e2e_mode_updates_clients():
 
 
 def test_multi_client_beats_starved_single_client():
-    """The paper's central claim, on synthetic cholesterol data."""
-    x, y = make_cholesterol(3000, seed=0)
+    """The paper's central claim, on synthetic cholesterol data.
+
+    The starved client must hold too little data to fit the noisy
+    Friedewald relation (~32 samples here) and both runs must train to
+    near-convergence, otherwise the comparison is an early-training race
+    decided by RNG (the seed's 3000-sample / 64-step version flipped
+    either way — it was masked by the tier-1 collection failure)."""
+    x, y = make_cholesterol(400, seed=0)
     train, _val, test = train_val_test_split(x, y)
     shards = split_clients(*train)
     ad = mlp_adapter(CHOLESTEROL_MLP)
     tc = SplitTrainConfig(server_batch=128)
     opt = adamw(3e-3)
-    st_m, _ = train_spatio_temporal(ad, tc, opt, shards, epochs=8, steps_per_epoch=8)
-    st_s, _ = train_single_client(ad, tc, opt, shards[2], epochs=8, steps_per_epoch=8)
+    st_m, _ = train_spatio_temporal(ad, tc, opt, shards, epochs=30, steps_per_epoch=8)
+    st_s, _ = train_single_client(ad, tc, opt, shards[2], epochs=30, steps_per_epoch=8)
     ev_m = evaluate(ad, st_m, *test)
     ev_s = evaluate(ad, st_s, *test)
     assert ev_m["msle"] < ev_s["msle"]

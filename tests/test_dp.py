@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dp import DPConfig, clip_per_sample, composed_epsilon, dp_release

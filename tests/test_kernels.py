@@ -31,7 +31,7 @@ def test_privacy_conv_sweep(B, H, W, Cin, Cout, noise, dtype):
     w = (jax.random.normal(ks[1], (3, 3, Cin, Cout)) * 0.1).astype(dtype)
     b = (jax.random.normal(ks[2], (Cout,)) * 0.1).astype(dtype)
     nz = jax.random.normal(ks[3], (B, H // 2, W // 2, Cout))
-    got = privacy_conv_pallas(x, w, b, nz, noise_scale=noise)
+    got = privacy_conv_pallas(x, w, b, nz, noise_scale=noise, interpret=True)
     want = privacy_conv_ref(x, w, b, nz, noise_scale=noise)
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
@@ -44,8 +44,8 @@ def test_privacy_conv_tiled_matches_untiled():
     w = jax.random.normal(ks[1], (3, 3, 2, 8)) * 0.1
     b = jnp.zeros((8,))
     nz = jnp.zeros((1, 16, 8, 8))
-    full = privacy_conv_pallas(x, w, b, nz, tile_h=32)
-    tiled = privacy_conv_pallas(x, w, b, nz, tile_h=8)
+    full = privacy_conv_pallas(x, w, b, nz, tile_h=32, interpret=True)
+    tiled = privacy_conv_pallas(x, w, b, nz, tile_h=8, interpret=True)
     np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-6)
 
 

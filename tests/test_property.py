@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.common.tree import tree_global_norm, tree_scale, tree_size

@@ -70,6 +70,10 @@ with mesh:
     compiled = jax.jit(low.fn, in_shardings=low.in_shardings,
                        out_shardings=low.out_shardings).lower(*low.args).compile()
 cost = compiled.cost_analysis()
+# cost_analysis() returns a dict on newer jaxlib, a one-element list of
+# dicts on older versions
+if isinstance(cost, (list, tuple)):
+    cost = cost[0] if cost else {}
 print("OK", float(cost.get("flops", 0)) > 0)
 """
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,

@@ -1,0 +1,187 @@
+"""Fused-engine guarantees: numerical parity with the seed per-client-loop
+step, custom-VJP correctness of the Pallas privacy kernel, and the scanned
+epoch runner's on-device sampling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP, COVID_CNN
+from repro.core.adapters import cnn_adapter, mlp_adapter
+from repro.core.trainer import (
+    SplitTrainConfig,
+    client_batch_sizes,
+    device_put_shards,
+    evaluate,
+    fused_client_batch,
+    make_epoch_runner,
+    make_looped_step,
+    make_spatio_temporal_step,
+    stack_batches,
+    train_spatio_temporal,
+)
+from repro.data import make_cholesterol, make_covid_ct, split_clients
+from repro.kernels.privacy_conv.ops import privacy_conv
+from repro.optim import adamw
+
+SMALL_CNN = dataclasses.replace(
+    COVID_CNN, input_hw=(16, 16), stages=((8, 1), (16, 1)), dense_units=(16,)
+)
+# uniform shares + divisible batch -> looped and fused paths consume
+# byte-identical batches, so parity is exact up to fp32 reassociation
+UNIFORM = SplitTrainConfig(server_batch=48, data_shares=(1.0, 1.0, 1.0))
+
+
+def _uniform_batches(shards, tc):
+    b = fused_client_batch(tc)
+    assert all(s == b for s in client_batch_sizes(tc))
+    batches = [(jnp.asarray(sx[:b]), jnp.asarray(sy[:b])) for sx, sy in shards]
+    return batches, stack_batches(batches)
+
+
+def _run_parity(adapter, tc, shards, n_steps=3):
+    opt = adamw(1e-2)
+    init_l, step_l = make_looped_step(adapter, tc, opt)
+    init_f, step_f = make_spatio_temporal_step(adapter, tc, opt)
+    state_l = init_l(jax.random.PRNGKey(0))
+    state_f = init_f(jax.random.PRNGKey(0))
+    batches, (xs, ys) = _uniform_batches(shards, tc)
+    for i in range(n_steps):
+        rng = jax.random.PRNGKey(100 + i)
+        state_l, m_l = step_l(state_l, batches, rng)
+        state_f, m_f = step_f(state_f, xs, ys, rng)
+        np.testing.assert_allclose(
+            float(m_f["loss"]), float(m_l["loss"]), rtol=2e-5, atol=1e-6,
+            err_msg=f"loss parity broke at step {i}",
+        )
+        np.testing.assert_allclose(
+            float(m_f["grad_norm"]), float(m_l["grad_norm"]), rtol=2e-5, atol=1e-6,
+            err_msg=f"grad-norm parity broke at step {i}",
+        )
+    for a, b in zip(jax.tree.leaves(state_l["server"]), jax.tree.leaves(state_f["server"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+    return state_l, state_f
+
+
+def test_fused_matches_looped_detached_mlp():
+    x, y = make_cholesterol(600, seed=0)
+    shards = split_clients(x, y)
+    _run_parity(mlp_adapter(CHOLESTEROL_MLP), UNIFORM, shards)
+
+
+def test_fused_matches_looped_e2e_mlp():
+    x, y = make_cholesterol(600, seed=0)
+    shards = split_clients(x, y)
+    tc = dataclasses.replace(UNIFORM, mode="e2e")
+    state_l, state_f = _run_parity(mlp_adapter(CHOLESTEROL_MLP), tc, shards)
+    # e2e: the stacked client banks must track the looped per-client banks
+    for c in range(tc.n_clients):
+        bank_f = jax.tree.map(lambda a: a[c], state_f["client_banks"])
+        for a, b in zip(
+            jax.tree.leaves(state_l["client_banks"][c]), jax.tree.leaves(bank_f)
+        ):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_matches_looped_detached_cnn():
+    x, y = make_covid_ct(200, hw=16, seed=0)
+    shards = split_clients(x, y)
+    _run_parity(cnn_adapter(SMALL_CNN), UNIFORM, shards, n_steps=2)
+
+
+# ------------------------------------------------------------ privacy kernel
+def test_privacy_conv_custom_vjp_matches_xla_reference():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (2, 16, 16, 2))
+    w = jax.random.normal(ks[1], (3, 3, 2, 8)) * 0.1
+    b = jax.random.normal(ks[2], (8,)) * 0.1
+
+    def make_loss(use_kernel):
+        def loss(x, w, b):
+            out = privacy_conv(x, w, b, ks[3], noise_scale=0.05,
+                               use_kernel=use_kernel, interpret=True)
+            return jnp.sum(out ** 2)
+        return loss
+
+    val_k, grads_k = jax.value_and_grad(make_loss(True), argnums=(0, 1, 2))(x, w, b)
+    val_r, grads_r = jax.value_and_grad(make_loss(False), argnums=(0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(float(val_k), float(val_r), rtol=2e-5)
+    for gk, gr in zip(grads_k, grads_r):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-4, atol=1e-5)
+
+
+def test_cnn_client_forward_kernel_parity():
+    """use_kernel=True must reproduce the XLA client stage bit-compatibly
+    (same conv+pool math, same fused noise draw)."""
+    cfg = SMALL_CNN
+    cfg_k = dataclasses.replace(cfg, use_kernel=True, interpret=True)
+    ad, ad_k = cnn_adapter(cfg), cnn_adapter(cfg_k)
+    params = ad.init(jax.random.PRNGKey(0))["client"]
+    x = jnp.asarray(make_covid_ct(4, hw=16, seed=1)[0])
+    key = jax.random.PRNGKey(7)
+    f = ad.client_forward(params, x, key)
+    f_k = ad_k.client_forward(params, x, key)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f), rtol=2e-5, atol=2e-5)
+
+
+def test_fused_step_with_kernel_on_hot_path():
+    """The vmapped fused step runs with the Pallas kernel in the client
+    forward (interpret mode on CPU) and matches the XLA-path step."""
+    x, y = make_covid_ct(120, hw=16, seed=0)
+    shards = split_clients(x, y)
+    tc = dataclasses.replace(UNIFORM, server_batch=12)
+    opt = adamw(1e-3)
+    outs = {}
+    for use_kernel in (False, True):
+        cfg = dataclasses.replace(SMALL_CNN, use_kernel=use_kernel, interpret=True)
+        ad = cnn_adapter(cfg)
+        init_state, step = make_spatio_temporal_step(ad, tc, opt)
+        state = init_state(jax.random.PRNGKey(0))
+        _, (xs, ys) = _uniform_batches(shards, tc)
+        state, m = step(state, xs, ys, jax.random.PRNGKey(1))
+        outs[use_kernel] = (float(m["loss"]), float(m["grad_norm"]))
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-4)
+
+
+# ------------------------------------------------------------- epoch runner
+def test_epoch_runner_scans_and_reports_stacked_metrics():
+    x, y = make_cholesterol(300, seed=0)
+    shards = split_clients(x, y)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = SplitTrainConfig(server_batch=32)
+    init_state, run_epoch = make_epoch_runner(ad, tc, adamw(1e-2), steps_per_epoch=5)
+    data_x, data_y, lens = device_put_shards(shards)
+    state = init_state(jax.random.PRNGKey(0))
+    state, ms = run_epoch(state, data_x, data_y, lens, jax.random.PRNGKey(1))
+    assert ms["loss"].shape == (5,)
+    assert bool(jnp.all(jnp.isfinite(ms["loss"])))  # NaN => sampler read padding
+    assert int(state["step"]) == 5
+
+
+def test_on_device_sampling_never_reads_padding():
+    """Shards of wildly different sizes: padding is NaN by construction, so
+    any out-of-range index poisons the loss."""
+    x, y = make_cholesterol(1000, seed=0)
+    shards = [(x[:700], y[:700]), (x[700:760], y[700:760]), (x[760:767], y[760:767])]
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = SplitTrainConfig(server_batch=64)
+    data_x, data_y, lens = device_put_shards(shards)
+    assert bool(jnp.any(jnp.isnan(data_x)))  # padding is poisoned
+    _, hist = train_spatio_temporal(
+        ad, tc, adamw(1e-2), shards, epochs=2, steps_per_epoch=6
+    )
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_train_deterministic_given_seed():
+    x, y = make_cholesterol(300, seed=0)
+    shards = split_clients(x, y)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = SplitTrainConfig(server_batch=32)
+    runs = [
+        train_spatio_temporal(ad, tc, adamw(1e-2), shards, epochs=2, steps_per_epoch=4, seed=3)[1]
+        for _ in range(2)
+    ]
+    assert runs[0] == runs[1]
