@@ -1,4 +1,8 @@
-"""One benchmark per paper table/figure (synthetic data; see DESIGN.md §6).
+"""One benchmark per paper table/figure (synthetic data; see docs/api.md).
+
+Every training flow runs through the unified ``SplitSession`` surface (the
+FedAvg baseline included — same evaluate, same state shape), so these tables
+double as an end-to-end exercise of the engine registry.
 
 Each function returns (name, us_per_call, derived) rows:
   us_per_call — mean wall time of one jitted train step (μs)
@@ -11,17 +15,16 @@ import time
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import (
     CHOLESTEROL_MLP, COVID_CNN, MURA_VGG19, TABLE1_CNN,
 )
 from repro.core.adapters import cnn_adapter, mlp_adapter
-from repro.core.fedavg import train_fedavg
+from repro.core.session import SplitSession
 from repro.core.trainer import (
-    SplitTrainConfig, evaluate, fused_client_batch, make_spatio_temporal_step,
-    stack_batches, train_single_client, train_spatio_temporal,
+    SplitTrainConfig, fused_client_batch, make_spatio_temporal_step,
+    single_client_config, stack_batches,
 )
 from repro.data import make_cholesterol, make_covid_ct, make_mura, split_clients, train_val_test_split
 from repro.optim import adamw
@@ -69,9 +72,9 @@ def table1_layers_at_client() -> List[Row]:
     for cut in range(0, 5):
         cfg = dataclasses.replace(TABLE1_CNN, cut_layers=cut, privacy_noise=0.02)
         ad = cnn_adapter(cfg)
-        state, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards,
-                                         epochs=6, steps_per_epoch=10)
-        acc = evaluate(ad, state, *test)["accuracy"]
+        session = SplitSession(ad, tc, adamw(1e-3))
+        session.fit(shards, epochs=6, steps_per_epoch=10)
+        acc = session.evaluate(*test)["accuracy"]
         init_state, step = make_spatio_temporal_step(ad, tc, adamw(1e-3))
         xs, ys = _fused_batches(shards, tc)
         us = _time_step(step, init_state(jax.random.PRNGKey(0)), xs, ys)
@@ -80,7 +83,8 @@ def table1_layers_at_client() -> List[Row]:
 
 
 def table5_fl_vs_split() -> List[Row]:
-    """Paper Table 5: FedAvg vs multi-client split learning on COVID CT."""
+    """Paper Table 5: FedAvg vs multi-client split learning on COVID CT —
+    both regimes through the SAME SplitSession surface."""
     cfg = dataclasses.replace(
         COVID_CNN, input_hw=(32, 32), stages=((8, 1), (16, 1), (32, 1)),
         dense_units=(32,),
@@ -92,17 +96,16 @@ def table5_fl_vs_split() -> List[Row]:
     rows = []
 
     t0 = time.perf_counter()
-    st, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards, epochs=8, steps_per_epoch=10)
-    split_acc = evaluate(ad, st, *test)["accuracy"]
+    split = SplitSession(ad, tc, adamw(1e-3))
+    split.fit(shards, epochs=8, steps_per_epoch=10)
+    split_acc = split.evaluate(*test)["accuracy"]
     rows.append(("table5/split_learning", (time.perf_counter() - t0) / 80 * 1e6,
                  f"accuracy={split_acc:.4f}"))
 
     t0 = time.perf_counter()
-    gp, _ = train_fedavg(ad, tc, adamw(1e-3), shards, rounds=8, local_steps=10)
-    fwd = jax.jit(lambda p, xb: ad.server_forward(
-        p["server"], ad.client_forward(p["client"], xb, None)))
-    out = fwd(gp, jnp.asarray(test[0]))
-    fl_acc = float(ad.metrics(out, jnp.asarray(test[1]))["accuracy"])
+    fl = SplitSession(ad, tc, adamw(1e-3), engine="fedavg", local_batch=32)
+    fl.fit(shards, epochs=8, steps_per_epoch=10)
+    fl_acc = fl.evaluate(*test)["accuracy"]
     rows.append(("table5/fedavg", (time.perf_counter() - t0) / 240 * 1e6,
                  f"accuracy={fl_acc:.4f}"))
     rows.append(("table5/gap", 0.0, f"split_minus_fl={split_acc - fl_acc:+.4f}"))
@@ -121,10 +124,12 @@ def table6_mura_parts() -> List[Row]:
     for part in ("wrist", "elbow", "humerus"):
         x, y = make_mura(900, hw=32, seed=0, part=part)
         shards, test = _shards_and_test(x, y)
-        st, _ = train_spatio_temporal(ad, tc, adamw(1e-3), shards, epochs=10, steps_per_epoch=8)
-        multi = evaluate(ad, st, *test)["accuracy"]
-        st1, _ = train_single_client(ad, tc, adamw(1e-3), shards[2], epochs=10, steps_per_epoch=8)
-        single = evaluate(ad, st1, *test)["accuracy"]
+        session = SplitSession(ad, tc, adamw(1e-3))
+        session.fit(shards, epochs=10, steps_per_epoch=8)
+        multi = session.evaluate(*test)["accuracy"]
+        solo = SplitSession(ad, single_client_config(tc), adamw(1e-3))
+        solo.fit([shards[2]], epochs=10, steps_per_epoch=8)
+        single = solo.evaluate(*test)["accuracy"]
         rows.append((f"table6/{part}", 0.0,
                      f"single={single:.4f};spatio={multi:.4f};delta={multi-single:+.4f}"))
     return rows
@@ -136,10 +141,12 @@ def table7_cholesterol() -> List[Row]:
     shards, test = _shards_and_test(x, y)
     ad = mlp_adapter(CHOLESTEROL_MLP)
     tc = SplitTrainConfig(server_batch=256)
-    st, _ = train_spatio_temporal(ad, tc, adamw(3e-3), shards, epochs=15, steps_per_epoch=10)
-    multi = evaluate(ad, st, *test)
-    st1, _ = train_single_client(ad, tc, adamw(3e-3), shards[2], epochs=15, steps_per_epoch=10)
-    single = evaluate(ad, st1, *test)
+    session = SplitSession(ad, tc, adamw(3e-3))
+    session.fit(shards, epochs=15, steps_per_epoch=10)
+    multi = session.evaluate(*test)
+    solo = SplitSession(ad, single_client_config(tc), adamw(3e-3))
+    solo.fit([shards[2]], epochs=15, steps_per_epoch=10)
+    single = solo.evaluate(*test)
 
     init_state, step = make_spatio_temporal_step(ad, tc, adamw(3e-3))
     xs, ys = _fused_batches(shards, tc)
@@ -154,6 +161,8 @@ def table7_cholesterol() -> List[Row]:
 def fig7_privacy_inversion() -> List[Row]:
     """Figs. 2/7/8 quantified: inversion-attack reconstruction error vs cut
     depth and privacy noise (higher MSE / lower NCC = stronger privacy)."""
+    import jax.numpy as jnp
+
     from repro.core.inversion import inversion_attack_report
 
     x, _ = make_covid_ct(1, hw=32, seed=0)

@@ -9,10 +9,12 @@ Measures steps/sec of the CPU demo CNN config on synthetic COVID-CT data:
     serial on XLA:CPU), leaf-wise clip+AdamW over the parameter tree,
     per-step host RNG sampling (np.random), per-step host->device batch
     copies, and one dispatch per step.
-  * ``fused`` — this PR's engine: stacked client banks + vmap (tap-GEMM
-    client convs), reshape max-pool, flat-buffer clip+AdamW, on-device
-    sampling, one unrolled `lax.scan` dispatch per epoch with donated
-    carry, metrics read once per epoch.
+  * ``fused`` — the fused engine driven through the unified ``SplitSession``
+    surface (engine="auto"): stacked client banks + vmap (tap-GEMM client
+    convs), reshape max-pool, flat-buffer clip+AdamW, on-device sampling,
+    one unrolled `lax.scan` dispatch per epoch with donated carry, metrics
+    read once per epoch. Timing one epoch = one ``session.fit`` call, so the
+    session facade's per-epoch overhead is IN the measurement.
 
 Each path is timed best-of-``reps`` (the shared CI host is noisy; min
 time is the closest estimate of true cost). Writes ``BENCH_trainer.json``
@@ -145,22 +147,15 @@ def _seed_steps_per_sec(cfg, tc, shards, steps: int, reps: int) -> float:
 
 
 def _fused_steps_per_sec(adapter, tc, shards, steps: int, reps: int) -> float:
-    from repro.core.trainer import device_put_shards, make_epoch_runner
+    from repro.core.session import SplitSession
     from repro.optim import adamw
 
-    data_x, data_y, lens = device_put_shards(shards)
-    init_state, run_epoch = make_epoch_runner(adapter, tc, adamw(1e-3), steps)
-    state = init_state(jax.random.PRNGKey(0))
-    root = jax.random.PRNGKey(1)
-    state, ms = run_epoch(state, data_x, data_y, lens, jax.random.fold_in(root, 0))
-    jax.block_until_ready(ms)  # warmup/compile
+    session = SplitSession(adapter, tc, adamw(1e-3), engine="auto")
+    session.fit(shards, epochs=1, steps_per_epoch=steps)  # warmup/compile
     best = 0.0
-    for rep in range(reps):
+    for _ in range(reps):
         t0 = time.perf_counter()
-        state, ms = run_epoch(
-            state, data_x, data_y, lens, jax.random.fold_in(root, rep + 1)
-        )
-        _ = {k: float(np.mean(jax.device_get(v))) for k, v in ms.items()}
+        session.fit(shards, epochs=1, steps_per_epoch=steps)
         best = max(best, steps / (time.perf_counter() - t0))
     return best
 
@@ -184,6 +179,7 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
             "timing": f"best-of-{reps}",
             "mode": tc.mode,
             "backend": jax.default_backend(),
+            "api": "SplitSession(engine='auto')",
         },
         "seed_steps_per_sec": seed_sps,
         "fused_steps_per_sec": fused_sps,

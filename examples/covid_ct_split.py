@@ -1,6 +1,7 @@
 """Paper Fig. 5: COVID-19 CT classification — spatio-temporal split learning
 vs single-client baselines with 10% / 20% / 70% of the data, plus the FedAvg
-comparison of Table 5. Synthetic CT stand-ins (see DESIGN.md §6).
+comparison of Table 5. Synthetic CT stand-ins; every regime runs through the
+same `SplitSession` surface (engines: auto / fedavg — see docs/api.md).
 
   PYTHONPATH=src python examples/covid_ct_split.py [--epochs 10] [--hw 32]
 """
@@ -8,16 +9,9 @@ import argparse
 import dataclasses
 import json
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.paper_models import COVID_CNN
+from repro.core import SplitSession, SplitTrainConfig, evaluate, single_client_config
 from repro.core.adapters import cnn_adapter
-from repro.core.fedavg import train_fedavg
-from repro.core.trainer import (
-    SplitTrainConfig, evaluate, train_single_client, train_spatio_temporal,
-)
 from repro.data import make_covid_ct, split_clients, train_val_test_split
 from repro.optim import adamw
 
@@ -42,35 +36,26 @@ def main(argv=None):
     shards = split_clients(*train, shares=(0.7, 0.2, 0.1))
     adapter = cnn_adapter(cfg)
     tc = SplitTrainConfig(server_batch=64)
-    opt = adamw(1e-3)
+    val_fn = lambda state: evaluate(adapter, state, *test)
 
     results = {}
     print("spatio-temporal (3 hospitals, 7:2:1)...")
-    st, hist = train_spatio_temporal(
-        adapter, tc, opt, shards, epochs=args.epochs,
-        steps_per_epoch=args.steps_per_epoch,
-        eval_fn=lambda s: evaluate(adapter, s, *test),
-    )
-    results["spatio_temporal"] = {"curve": hist, "final": evaluate(adapter, st, *test)}
+    session = SplitSession(adapter, tc, adamw(1e-3))
+    hist = session.fit(shards, epochs=args.epochs,
+                       steps_per_epoch=args.steps_per_epoch, eval_fn=val_fn)
+    results["spatio_temporal"] = {"curve": hist, "final": session.evaluate(*test)}
 
     for i, frac in enumerate(("70%", "20%", "10%")):
         print(f"single-client ({frac} of data)...")
-        st1, hist1 = train_single_client(
-            adapter, tc, opt, shards[i], epochs=args.epochs,
-            steps_per_epoch=args.steps_per_epoch,
-            eval_fn=lambda s: evaluate(adapter, s, *test),
-        )
-        results[f"single_{frac}"] = {"curve": hist1, "final": evaluate(adapter, st1, *test)}
+        solo = SplitSession(adapter, single_client_config(tc), adamw(1e-3))
+        hist1 = solo.fit([shards[i]], epochs=args.epochs,
+                         steps_per_epoch=args.steps_per_epoch, eval_fn=val_fn)
+        results[f"single_{frac}"] = {"curve": hist1, "final": solo.evaluate(*test)}
 
     print("federated learning (FedAvg) baseline...")
-    gp, fhist = train_fedavg(
-        adapter, tc, opt, shards, rounds=args.epochs,
-        local_steps=args.steps_per_epoch, local_batch=32,
-    )
-    fwd = jax.jit(lambda p, xb: adapter.server_forward(
-        p["server"], adapter.client_forward(p["client"], xb, None)))
-    out = fwd(gp, jnp.asarray(test[0]))
-    results["fedavg"] = {"final": {k: float(v) for k, v in adapter.metrics(out, jnp.asarray(test[1])).items()}}
+    fl = SplitSession(adapter, tc, adamw(1e-3), engine="fedavg", local_batch=32)
+    fl.fit(shards, epochs=args.epochs, steps_per_epoch=args.steps_per_epoch)
+    results["fedavg"] = {"final": fl.evaluate(*test)}
 
     print(f"\n{'system':>20} {'accuracy':>9} {'loss':>8}")
     for name, r in results.items():

@@ -1,6 +1,7 @@
 """Paper Table 6 / Fig. 6: MURA X-ray abnormality detection per body part —
-single-client vs spatio-temporal split learning (VGG-style CNN, scaled for
-CPU; --hw 224 --full-vgg runs the paper's VGG19 configuration).
+single-client vs spatio-temporal split learning through the `SplitSession`
+API (VGG-style CNN, scaled for CPU; --hw 224 --full-vgg runs the paper's
+VGG19 configuration).
 
   PYTHONPATH=src python examples/mura_xray.py [--parts wrist elbow]
 """
@@ -9,10 +10,8 @@ import dataclasses
 import json
 
 from repro.configs.paper_models import MURA_VGG19
+from repro.core import SplitSession, SplitTrainConfig, single_client_config
 from repro.core.adapters import cnn_adapter
-from repro.core.trainer import (
-    SplitTrainConfig, evaluate, train_single_client, train_spatio_temporal,
-)
 from repro.data import MURA_BODY_PARTS, make_mura, split_clients, train_val_test_split
 from repro.optim import adamw
 
@@ -37,19 +36,19 @@ def main(argv=None):
         )
     adapter = cnn_adapter(cfg)
     tc = SplitTrainConfig(server_batch=64)
-    opt = adamw(1e-3)
+    opt = lambda: adamw(1e-3)
 
     rows = {}
     for part in args.parts:
         x, y = make_mura(args.n, hw=cfg.input_hw[0], seed=0, part=part)
         train, _val, test = train_val_test_split(x, y)
         shards = split_clients(*train)
-        st, _ = train_spatio_temporal(adapter, tc, opt, shards,
-                                      epochs=args.epochs, steps_per_epoch=8)
-        multi = evaluate(adapter, st, *test)["accuracy"]
-        st1, _ = train_single_client(adapter, tc, opt, shards[2],
-                                     epochs=args.epochs, steps_per_epoch=8)
-        single = evaluate(adapter, st1, *test)["accuracy"]
+        session = SplitSession(adapter, tc, opt())
+        session.fit(shards, epochs=args.epochs, steps_per_epoch=8)
+        multi = session.evaluate(*test)["accuracy"]
+        solo = SplitSession(adapter, single_client_config(tc), opt())
+        solo.fit([shards[2]], epochs=args.epochs, steps_per_epoch=8)
+        single = solo.evaluate(*test)["accuracy"]
         rows[part] = {"single": single, "spatio_temporal": multi}
         print(f"{part:>10}: single={single:.3f}  spatio-temporal={multi:.3f}")
 

@@ -2,20 +2,20 @@
 
 Three hospitals hold imbalanced (7:2:1) private cholesterol records; a
 centralized server learns an LDL-C regressor without ever seeing raw data.
+Everything runs through the unified `SplitSession` API (see docs/api.md for
+the engine registry and the canonical state it exposes).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig, single_client_config
 from repro.core.adapters import mlp_adapter
-from repro.core.trainer import (
-    SplitTrainConfig, evaluate, train_single_client, train_spatio_temporal,
-)
 from repro.data import make_cholesterol, split_clients, train_val_test_split
 from repro.optim import adamw
 
 
 def main():
-    # synthetic stand-in for the IRB-gated SNUH dataset (see DESIGN.md).
+    # synthetic stand-in for the IRB-gated SNUH dataset (see docs/api.md §data).
     # Small on purpose: the paper's effect needs the 10% hospital to hold
     # too few noisy records to fit the Friedewald relation on its own.
     x, y = make_cholesterol(500, seed=0)
@@ -26,20 +26,23 @@ def main():
     tc = SplitTrainConfig(n_clients=3, data_shares=(0.7, 0.2, 0.1), server_batch=128)
 
     print("training spatio-temporal split learning (3 hospitals)...")
-    state, _ = train_spatio_temporal(
-        adapter, tc, adamw(3e-3), shards, epochs=30, steps_per_epoch=10
-    )
-    multi = evaluate(adapter, state, *test)
+    session = SplitSession(adapter, tc, adamw(3e-3))
+    session.fit(shards, epochs=30, steps_per_epoch=10)
+    multi = session.evaluate(*test)  # share-weighted mean + real per-client rows
 
     print("training single-client baseline (the 10% hospital alone)...")
-    state1, _ = train_single_client(
-        adapter, tc, adamw(3e-3), shards[2], epochs=30, steps_per_epoch=10
-    )
-    single = evaluate(adapter, state1, *test)
+    baseline = SplitSession(adapter, single_client_config(tc), adamw(3e-3))
+    baseline.fit([shards[2]], epochs=30, steps_per_epoch=10)
+    single = baseline.evaluate(*test)
 
     print(f"\n{'metric':>8} {'spatio-temporal':>16} {'single-client':>14}")
     for k in ("msle", "rmsle", "smape"):
         print(f"{k:>8} {multi[k]:>16.4f} {single[k]:>14.4f}")
+    print("\nper-hospital msle through the shared trunk "
+          "(each hospital's own privacy layer):")
+    for c, (share, per) in enumerate(zip(tc.data_shares, multi["per_client"])):
+        print(f"  hospital {c} ({int(share * 100):>2}% of data): {per['msle']:.4f}")
+    print(f"  10% hospital alone (no collaboration): {single['per_client'][0]['msle']:.4f}")
     print("\n(cf. paper Table 7: spatio-temporal wins every metric)")
 
 

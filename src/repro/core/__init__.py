@@ -1,5 +1,8 @@
 """Spatio-temporal split learning — the paper's primary contribution.
 
+- session:    ONE `SplitSession` surface over every execution regime
+              (fused-scan / fused-stepwise / looped-ref / protocol-async /
+              fedavg), with mesh sharding of the client axis
 - queue:      the server-side feature/parameter queue (paper Fig. 1)
 - protocol:   explicit two-program client/server simulation (protocol fidelity)
 - trainer:    fused SPMD multi-client trainers for the paper's CNN/MLP models
@@ -9,13 +12,18 @@
 """
 from repro.core.queue import FeatureQueue
 from repro.core.trainer import (
+    CLIENT_AXIS,
     SplitTrainConfig,
+    evaluate,
+    evaluate_per_client,
     make_spatio_temporal_step,
     make_looped_step,
     make_single_client_step,
     make_epoch_runner,
     device_put_shards,
+    single_client_config,
     train_spatio_temporal,
     train_single_client,
 )
 from repro.core.fedavg import train_fedavg
+from repro.core.session import SplitSession, available_engines, register_engine

@@ -4,7 +4,8 @@ own shard, and the server averages parameter updates weighted by data share.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,25 +16,8 @@ from repro.core.trainer import SplitTrainConfig
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
 
-def train_fedavg(
-    adapter: SplitAdapter,
-    tc: SplitTrainConfig,
-    opt: Optimizer,
-    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
-    *,
-    rounds: int,
-    local_steps: int,
-    local_batch: int = 32,
-    seed: int = 0,
-    eval_fn=None,
-) -> Tuple[Any, List[Dict[str, float]]]:
-    """Returns (global_params, history). global_params = {"client","server"}
-    (full model; the split is structural only here — FL shares everything)."""
-    n = tc.n_clients
-    weights = np.asarray(tc.data_shares, np.float64)
-    weights = weights / weights.sum()
-
-    global_params = adapter.init(jax.random.PRNGKey(seed))
+def make_local_sgd(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
+    """One client's jitted full-model SGD step (build once, reuse per round)."""
 
     @jax.jit
     def local_sgd(params, opt_state, x, y, step):
@@ -48,9 +32,34 @@ def train_fedavg(
         updates, opt_state = opt.update(grads, opt_state, params, step)
         return apply_updates(params, updates), opt_state, loss
 
-    rng = np.random.default_rng(seed)
+    return local_sgd
+
+
+def fedavg_rounds(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    global_params: Any,
+    *,
+    rounds: int,
+    local_steps: int,
+    local_batch: int = 32,
+    rng: Optional[np.random.Generator] = None,
+    round_offset: int = 0,
+    local_sgd: Optional[Callable] = None,
+    eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+) -> Tuple[Any, List[Dict[str, float]]]:
+    """The FedAvg loop from the given ``global_params``; resumable via
+    ``round_offset`` (keeps optimizer step counts monotonic across calls)."""
+    n = tc.n_clients
+    weights = np.asarray(tc.data_shares, np.float64)
+    weights = weights / weights.sum()
+    rng = rng if rng is not None else np.random.default_rng(0)
+    local_sgd = local_sgd if local_sgd is not None else make_local_sgd(adapter, tc, opt)
+
     history: List[Dict[str, float]] = []
-    for rnd in range(rounds):
+    for rnd in range(round_offset, round_offset + rounds):
         locals_: List[Any] = []
         losses = []
         for c in range(n):
@@ -74,3 +83,40 @@ def train_fedavg(
             rec.update({f"val_{k}": v for k, v in eval_fn(global_params).items()})
         history.append(rec)
     return global_params, history
+
+
+def train_fedavg(
+    adapter: SplitAdapter,
+    tc: SplitTrainConfig,
+    opt: Optimizer,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    *,
+    rounds: int,
+    local_steps: int,
+    local_batch: int = 32,
+    seed: int = 0,
+    eval_fn=None,
+) -> Tuple[Any, List[Dict[str, float]]]:
+    """Deprecated shim: use ``repro.core.session.SplitSession`` with
+    ``engine="fedavg"``. Returns (global_params, history). global_params =
+    {"client","server"} (full model; the split is structural only here —
+    FL shares everything)."""
+    warnings.warn(
+        "train_fedavg is deprecated; use SplitSession(engine='fedavg')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.core.session import SplitSession
+
+    wrapped = None
+    if eval_fn is not None:
+        def wrapped(canonical):  # legacy eval_fn expects the native full model
+            client0 = jax.tree.map(lambda a: a[0], canonical["client_banks"])
+            return eval_fn({"client": client0, "server": canonical["server"]})
+
+    session = SplitSession(
+        adapter, tc, opt, engine="fedavg", seed=seed, local_batch=local_batch
+    )
+    history = session.fit(
+        shards, epochs=rounds, steps_per_epoch=local_steps, eval_fn=wrapped
+    )
+    return session.native_state["params"], history

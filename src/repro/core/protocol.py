@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -52,13 +53,14 @@ class SplitServer:
     """The centralized server: trunk params + optimizer + the feature queue."""
 
     def __init__(self, adapter: SplitAdapter, server_params, opt: Optimizer,
-                 queue: FeatureQueue, clip_norm: float = 1.0):
+                 queue: FeatureQueue, clip_norm: float = 1.0,
+                 opt_state=None, step_count: int = 0):
         self.adapter = adapter
         self.params = server_params
         self.opt = opt
-        self.opt_state = opt.init(server_params)
+        self.opt_state = opt.init(server_params) if opt_state is None else opt_state
         self.queue = queue
-        self.step_count = 0
+        self.step_count = step_count
         self.losses: List[float] = []
         clip = clip_norm
 
@@ -91,34 +93,20 @@ class SplitServer:
         return loss
 
 
-def run_protocol(
-    adapter: SplitAdapter,
-    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
-    opt: Optimizer,
-    *,
+def drive_protocol(
+    clients: Sequence[SplitClient],
+    server: SplitServer,
+    queue: FeatureQueue,
+    shares: Sequence[float],
     total_server_steps: int,
-    client_batch: int = 32,
-    data_shares: Optional[Sequence[float]] = None,
-    queue_size: int = 64,
-    seed: int = 0,
+    *,
     threaded: bool = True,
-) -> Dict[str, Any]:
-    """Run the full async protocol; returns server params + stats."""
-    n = len(shards)
-    shares = list(data_shares or [1.0 / n] * n)
-    key = jax.random.PRNGKey(seed)
-    ref = adapter.init(key)
-    queue = FeatureQueue(max_size=queue_size)
-
-    clients = []
-    for c in range(n):
-        kc = jax.random.fold_in(key, c + 1)
-        clients.append(
-            SplitClient(c, adapter, adapter.init(kc)["client"], shards[c],
-                        batch=client_batch, noise_seed=seed)
-        )
-    server = SplitServer(adapter, ref["server"], opt, queue)
-
+) -> int:
+    """Drive prebuilt clients + server until ``server.step_count`` reaches
+    ``total_server_steps`` (an ABSOLUTE target, so repeated calls resume).
+    Returns the number of produced batches dropped without ever being
+    enqueued (0 unless the run stops while the queue is full)."""
+    dropped = 0
     if threaded:
         stop = threading.Event()
 
@@ -145,16 +133,59 @@ def run_protocol(
         quanta = np.maximum(1, np.round(np.asarray(shares) * 10).astype(int))
         while server.step_count < total_server_steps:
             for c, q in zip(clients, quanta):
+                if server.step_count >= total_server_steps:
+                    break
                 for _ in range(int(q)):
                     f, l = c.produce()
-                    queue.push(c.client_id, f, l)
+                    # a full queue DRAINS the server instead of dropping the
+                    # batch (the seed ignored push()'s return value here, so
+                    # rejected items silently vanished)
+                    pushed = queue.push(c.client_id, f, l)
+                    while not pushed and server.step_count < total_server_steps:
+                        server.train_one(timeout=0.0)
+                        pushed = queue.push(c.client_id, f, l)
+                    if not pushed:  # target reached with the queue still full
+                        dropped += 1
+                        break
             while len(queue) and server.step_count < total_server_steps:
                 server.train_one(timeout=0.0)
+    return dropped
 
+
+def run_protocol(
+    adapter: SplitAdapter,
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]],
+    opt: Optimizer,
+    *,
+    total_server_steps: int,
+    client_batch: int = 32,
+    data_shares: Optional[Sequence[float]] = None,
+    queue_size: int = 64,
+    seed: int = 0,
+    threaded: bool = True,
+) -> Dict[str, Any]:
+    """Deprecated shim: use ``repro.core.session.SplitSession`` with
+    ``engine="protocol-async"``. Returns the legacy result dict."""
+    warnings.warn(
+        "run_protocol is deprecated; use SplitSession(engine='protocol-async')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.core.session import SplitSession
+    from repro.core.trainer import SplitTrainConfig
+
+    n = len(shards)
+    shares = tuple(data_shares or [1.0 / n] * n)
+    session = SplitSession(
+        adapter, SplitTrainConfig(n_clients=n, data_shares=shares), opt,
+        engine="protocol-async", seed=seed, threaded=threaded,
+        client_batch=client_batch, queue_size=queue_size,
+    )
+    session.fit(shards, epochs=1, steps_per_epoch=total_server_steps)
+    native = session.native_state
     return {
-        "server_params": server.params,
-        "client_params": [c.params for c in clients],
-        "losses": server.losses,
-        "queue_stats": queue.stats(),
-        "server_steps": server.step_count,
+        "server_params": native["server"],
+        "client_params": list(native["client_banks"]),
+        "losses": session.engine.losses,
+        "queue_stats": session.engine.stats,
+        "server_steps": int(native["step"]),
     }

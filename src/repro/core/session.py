@@ -1,0 +1,565 @@
+"""One ``SplitSession`` over every execution regime of the paper's platform.
+
+The paper's protocol — a privacy-preserving layer at each hospital, the trunk
+at the central server — runs in this repo under several regimes: the fused
+SPMD engine (scan or stepwise epochs), the seed per-client reference loop,
+the wall-clock asynchronous queue protocol, and the FedAvg baseline. Each
+used to be its own entry point with its own state shape; ``SplitSession``
+drives all of them through ONE signature and ONE canonical state pytree, so
+checkpointing, evaluation, DP release and the inversion privacy metric apply
+uniformly to any regime.
+
+Canonical state::
+
+    {
+      "client_banks": pytree, every leaf with a leading [n_clients] axis,
+      "server":       server trunk params,
+      "opt":          engine-native optimizer state (fused: one flat buffer;
+                      looped/protocol: moment trees; fedavg: {}),
+      "step":         int32 progress counter in the engine's native unit
+                      (fused/looped: optimizer steps; protocol: server steps;
+                      fedavg: rounds),
+    }
+
+Engines register by name (see ``available_engines()``); ``engine="auto"``
+picks the fused engine and folds in the scan-vs-stepwise backend heuristic
+(``_auto_epoch_mode``). ``mesh=`` shards the canonical leading client axis
+over a device mesh with ``jax.shard_map`` so each hospital's privacy layer
+runs on its own device; on a single-device host it is a bit-exact no-op
+(asserted by the CPU parity test).
+
+    session = SplitSession(adapter, SplitTrainConfig(...), adamw(1e-3))
+    session.fit(shards, epochs=30, steps_per_epoch=10)
+    session.evaluate(x_test, y_test)   # per-client + share-weighted mean
+    session.save("ckpts/")             # canonical state -> npz + manifest
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.core import fedavg as fedavg_mod
+from repro.core import protocol as protocol_mod
+from repro.core.adapters import SplitAdapter
+from repro.core.queue import FeatureQueue
+from repro.core.trainer import (
+    CLIENT_AXIS,
+    SplitTrainConfig,
+    _auto_epoch_mode,
+    client_weights,
+    device_put_shards,
+    evaluate_per_client,
+    fused_client_batch,
+    make_epoch_runner,
+    make_looped_step,
+    make_sample_plan,
+    make_spatio_temporal_step,
+    stack_pytrees,
+    unstack_pytree,
+)
+from repro.optim.optimizers import Optimizer
+
+Shards = Sequence[Tuple[np.ndarray, np.ndarray]]
+EvalFn = Optional[Callable[[Any], Dict[str, float]]]
+
+
+class Engine(Protocol):
+    """What an execution regime must provide to ride behind ``SplitSession``.
+
+    ``run`` consumes and returns ENGINE-NATIVE state; ``to_canonical`` /
+    ``from_canonical`` convert losslessly to/from the canonical pytree (the
+    fused engines' native state IS canonical). ``eval_fn`` passed to ``run``
+    always receives the canonical state.
+    """
+
+    name: str
+
+    def init(self, key) -> Any: ...
+
+    def run(self, state, shards: Shards, *, epochs: int, steps_per_epoch: int,
+            eval_fn: EvalFn = None) -> Tuple[Any, List[Dict[str, float]]]: ...
+
+    def to_canonical(self, state) -> Any: ...
+
+    def from_canonical(self, canonical) -> Any: ...
+
+
+_ENGINES: Dict[str, Callable[..., Engine]] = {}
+
+
+def register_engine(name: str):
+    def deco(factory):
+        _ENGINES[name] = factory
+        return factory
+    return deco
+
+
+def available_engines() -> List[str]:
+    return sorted(_ENGINES)
+
+
+def _seed_from_key(key) -> int:
+    """Low word of an old-style PRNGKey == the int seed it was built from
+    (gives the host-side RNG engines the same seed the caller passed)."""
+    if not jnp.issubdtype(key.dtype, jnp.integer):  # new-style typed key
+        key = jax.random.key_data(key)
+    return int(np.asarray(key).ravel()[-1])
+
+
+# ------------------------------------------------------------ fused engines
+class FusedEngine:
+    """The throughput path (PR 1): stacked banks + vmapped privacy layer,
+    on-device sampling, scanned or stepwise epochs. Native state IS the
+    canonical state. ``mode=None`` ("auto") folds in ``_auto_epoch_mode``
+    per fit call. The only engine that honors ``mesh=``."""
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None,
+                 mode: Optional[str] = None, unroll: int = 8):
+        assert mode in (None, "scan", "stepwise"), mode
+        self.name = "auto" if mode is None else f"fused-{mode}"
+        self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.mesh, self.mode, self.unroll = mesh, mode, unroll
+        self._init_state, _ = make_spatio_temporal_step(adapter, tc, opt, mesh=mesh)
+        self._runners: Dict[Tuple[int, str], Callable] = {}
+        self._epochs_done = 0
+
+    def init(self, key):
+        self._root = key
+        self._epochs_done = 0
+        return self._init_state(key)
+
+    def _runner(self, steps_per_epoch: int, mode: str):
+        runner = self._runners.get((steps_per_epoch, mode))
+        if runner is None:
+            _, runner = make_epoch_runner(
+                self.adapter, self.tc, self.opt, steps_per_epoch,
+                unroll=self.unroll, mode=mode, mesh=self.mesh,
+            )
+            self._runners[(steps_per_epoch, mode)] = runner
+        return runner
+
+    def _place(self, state, data_x, data_y):
+        """Shard the client axis of the banks + epoch data over the mesh so
+        the shard_mapped privacy layer reads device-local operands."""
+        if self.mesh is None:
+            return state, data_x, data_y
+        from repro.sharding.specs import client_bank_specs
+
+        specs = client_bank_specs(state["client_banks"], self.mesh, CLIENT_AXIS)
+        banks = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            state["client_banks"], specs,
+        )
+        data_sh = NamedSharding(self.mesh, P(CLIENT_AXIS))
+        return (
+            {**state, "client_banks": banks},
+            jax.device_put(data_x, data_sh),
+            jax.device_put(data_y, data_sh),
+        )
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+        assert len(shards) == self.tc.n_clients
+        mode = self.mode or _auto_epoch_mode(shards, self.tc)
+        run_epoch = self._runner(steps_per_epoch, mode)
+        data_x, data_y, lens = device_put_shards(shards)
+        state, data_x, data_y = self._place(state, data_x, data_y)
+        history = []
+        for ep in range(epochs):
+            self._epochs_done += 1
+            state, ms = run_epoch(
+                state, data_x, data_y, lens,
+                jax.random.fold_in(self._root, self._epochs_done),
+            )
+            ms = jax.device_get(ms)  # single readout per epoch
+            rec = {k: float(np.mean(v)) for k, v in ms.items()}
+            rec["epoch"] = ep
+            if eval_fn is not None:
+                rec.update({f"val_{k}": v for k, v in eval_fn(state).items()})
+            history.append(rec)
+        return state, history
+
+    def to_canonical(self, state):
+        return state
+
+    def from_canonical(self, canonical):
+        return canonical
+
+
+def _fused_factory(mode):
+    def factory(adapter, tc, opt, *, mesh=None, **kw):
+        return FusedEngine(adapter, tc, opt, mesh=mesh, mode=mode, **kw)
+    return factory
+
+
+register_engine("auto")(_fused_factory(None))
+register_engine("fused-scan")(_fused_factory("scan"))
+register_engine("fused-stepwise")(_fused_factory("stepwise"))
+
+
+# ---------------------------------------------------------- looped reference
+@register_engine("looped-ref")
+class LoopedEngine:
+    """The seed per-client Python-loop step behind the session surface.
+
+    Batches come from the SAME on-device sample plan as the fused engines
+    (homogeneous per-client size ``fused_client_batch``), so with uniform
+    shares the looped and fused engines consume byte-identical batches and
+    their losses agree to fp32 reassociation."""
+
+    name = "looped-ref"
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None):
+        if mesh is not None:
+            raise ValueError("looped-ref does not support mesh=; use a fused engine")
+        self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.detached = tc.mode == "detached"
+        self._init_state, self._step = make_looped_step(adapter, tc, opt)
+        self._plans: Dict[int, Callable] = {}
+        self._epochs_done = 0
+
+    def init(self, key):
+        self._root = key
+        self._epochs_done = 0
+        return self._init_state(key)
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+        assert len(shards) == self.tc.n_clients
+        plan = self._plans.setdefault(
+            steps_per_epoch, make_sample_plan(self.tc, steps_per_epoch)
+        )
+        xs = [np.asarray(x) for x, _ in shards]
+        ys = [np.asarray(y) for _, y in shards]
+        lens = jnp.asarray([len(x) for x in xs], jnp.int32)
+        history = []
+        for ep in range(epochs):
+            self._epochs_done += 1
+            idx, step_keys = plan(lens, jax.random.fold_in(self._root, self._epochs_done))
+            idx = np.asarray(idx)
+            ms = []
+            for t in range(steps_per_epoch):
+                batches = [
+                    (jnp.asarray(xs[c][idx[t, c]]), jnp.asarray(ys[c][idx[t, c]]))
+                    for c in range(self.tc.n_clients)
+                ]
+                state, m = self._step(state, batches, step_keys[t])
+                ms.append(m)
+            rec = {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]}
+            rec["epoch"] = ep
+            if eval_fn is not None:
+                rec.update({f"val_{k}": v for k, v in eval_fn(self.to_canonical(state)).items()})
+            history.append(rec)
+        return state, history
+
+    def _map_trainable_banks(self, opt_state, fn):
+        """Apply ``fn`` to the banks half of every trainable-shaped moment in
+        the optimizer state (e2e trainable = (banks, server))."""
+        if self.detached:
+            return opt_state  # moments are server-shaped: nothing banked
+        return {k: (fn(v[0]), v[1]) for k, v in opt_state.items()}
+
+    def to_canonical(self, state):
+        return {
+            "client_banks": stack_pytrees(state["client_banks"]),
+            "server": state["server"],
+            "opt": self._map_trainable_banks(state["opt"], stack_pytrees),
+            "step": jnp.asarray(state["step"], jnp.int32),
+        }
+
+    def from_canonical(self, canonical):
+        n = self.tc.n_clients
+        return {
+            "client_banks": unstack_pytree(canonical["client_banks"], n),
+            "server": canonical["server"],
+            "opt": self._map_trainable_banks(
+                canonical["opt"], lambda t: unstack_pytree(t, n)
+            ),
+            "step": canonical["step"],
+        }
+
+
+# ------------------------------------------------------------ async protocol
+@register_engine("protocol-async")
+class ProtocolEngine:
+    """The wall-clock-faithful two-program protocol (``core.protocol``)
+    behind the session surface: real client/server objects communicating
+    only through a ``FeatureQueue``. One ``steps_per_epoch`` = one server
+    queue pop + trunk update. ``threaded=False`` is the deterministic
+    round-robin mode (used by the parity tests)."""
+
+    name = "protocol-async"
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None,
+                 threaded: bool = False, client_batch: Optional[int] = None,
+                 queue_size: int = 64, per_client_cap: Optional[int] = None):
+        if mesh is not None:
+            raise ValueError("protocol-async does not support mesh=; use a fused engine")
+        if tc.mode != "detached":
+            raise ValueError(
+                "protocol-async trains the server trunk only (the paper's "
+                "detached regime); mode='e2e' needs a fused or looped engine"
+            )
+        self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.threaded = threaded
+        self.client_batch = client_batch or fused_client_batch(tc)
+        self.queue_size, self.per_client_cap = queue_size, per_client_cap
+        self.losses: List[float] = []
+        self.stats: Dict[str, int] = {}
+
+    def init(self, key):
+        self._noise_seed = _seed_from_key(key)
+        ref = self.adapter.init(key)
+        banks = [
+            self.adapter.init(jax.random.fold_in(key, c + 1))["client"]
+            for c in range(self.tc.n_clients)
+        ]
+        return {
+            "client_banks": banks,
+            "server": ref["server"],
+            "opt": self.opt.init(ref["server"]),
+            "step": 0,
+        }
+
+    def _noise_seed_for(self, step: int) -> int:
+        """Per-run client RNG base, advanced by consumed server steps so a
+        second fit (or a restore-then-fit) draws FRESH batches and noise
+        keys instead of replaying the first fit's sequence. step=0 keeps
+        exact legacy ``run_protocol`` behavior."""
+        return self._noise_seed + 100003 * int(step)
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+        assert len(shards) == self.tc.n_clients
+        shares = np.asarray(self.tc.data_shares, np.float64)
+        shares = (shares / shares.sum()).tolist()
+        queue = FeatureQueue(max_size=self.queue_size,
+                             per_client_cap=self.per_client_cap)
+        clients = [
+            protocol_mod.SplitClient(
+                c, self.adapter, state["client_banks"][c], shards[c],
+                batch=self.client_batch,
+                noise_seed=self._noise_seed_for(state["step"]),
+            )
+            for c in range(self.tc.n_clients)
+        ]
+        server = protocol_mod.SplitServer(
+            self.adapter, state["server"], self.opt, queue,
+            clip_norm=self.tc.clip_norm,
+            opt_state=state["opt"], step_count=int(state["step"]),
+        )
+        dropped = 0
+        history = []
+        new_state = state
+        for ep in range(epochs):
+            target = server.step_count + steps_per_epoch
+            dropped += protocol_mod.drive_protocol(
+                clients, server, queue, shares, target, threaded=self.threaded
+            )
+            losses = server.losses[-steps_per_epoch:]
+            rec = {"epoch": ep, "loss": float(np.mean(losses)),
+                   "server_steps": server.step_count}
+            new_state = {
+                "client_banks": [c.params for c in clients],
+                "server": server.params,
+                "opt": server.opt_state,
+                "step": server.step_count,
+            }
+            if eval_fn is not None:
+                rec.update({f"val_{k}": v
+                            for k, v in eval_fn(self.to_canonical(new_state)).items()})
+            history.append(rec)
+        self.losses.extend(server.losses)
+        self.stats = {**queue.stats(), "dropped": dropped}
+        return new_state, history
+
+    def to_canonical(self, state):
+        return {
+            "client_banks": stack_pytrees(state["client_banks"]),
+            "server": state["server"],
+            "opt": state["opt"],
+            "step": jnp.asarray(state["step"], jnp.int32),
+        }
+
+    def from_canonical(self, canonical):
+        return {
+            "client_banks": unstack_pytree(canonical["client_banks"], self.tc.n_clients),
+            "server": canonical["server"],
+            "opt": canonical["opt"],
+            "step": int(canonical["step"]),
+        }
+
+
+# ------------------------------------------------------------------- fedavg
+@register_engine("fedavg")
+class FedAvgEngine:
+    """The paper's FL comparison behind the session surface. ``epochs`` maps
+    to FedAvg rounds, ``steps_per_epoch`` to local steps per round. The
+    canonical client_banks are n identical copies of the one global client
+    block (FedAvg shares everything), so per-client evaluation and the
+    privacy metrics still apply."""
+
+    name = "fedavg"
+    identical_banks = True  # evaluate scores one bank, replicates the row
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None,
+                 local_batch: int = 32):
+        if mesh is not None:
+            raise ValueError("fedavg does not support mesh=; use a fused engine")
+        if tc.mode != "detached":
+            raise ValueError(
+                "fedavg trains full local models; SplitTrainConfig.mode does "
+                "not apply — leave it at the default"
+            )
+        self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.local_batch = local_batch
+        self._local_sgd = fedavg_mod.make_local_sgd(adapter, tc, opt)
+
+    def init(self, key):
+        self._seed = _seed_from_key(key)
+        self._rng = np.random.default_rng(self._seed)
+        return {"params": self.adapter.init(key), "round": 0}
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+        assert len(shards) == self.tc.n_clients
+        wrapped = None
+        if eval_fn is not None:
+            def wrapped(gp):
+                return eval_fn(self.to_canonical({"params": gp, "round": 0}))
+        round_offset = int(state["round"])
+        # round 0 keeps exact legacy train_fedavg sampling; later offsets
+        # (second fit, or restore-then-fit) reseed from (seed, round) so a
+        # resumed session draws the SAME fresh stream a continued one would
+        rng = (self._rng if round_offset == 0
+               else np.random.default_rng((self._seed, round_offset)))
+        params, history = fedavg_mod.fedavg_rounds(
+            self.adapter, self.tc, self.opt, shards, state["params"],
+            rounds=epochs, local_steps=steps_per_epoch,
+            local_batch=self.local_batch, rng=rng,
+            round_offset=round_offset, local_sgd=self._local_sgd,
+            eval_fn=wrapped,
+        )
+        for i, rec in enumerate(history):
+            rec.setdefault("epoch", i)
+            rec.setdefault("loss", rec["mean_local_loss"])
+        return {"params": params, "round": int(state["round"]) + epochs}, history
+
+    def to_canonical(self, state):
+        client = state["params"]["client"]
+        banks = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.tc.n_clients,) + a.shape),
+            client,
+        )
+        return {
+            "client_banks": banks,
+            "server": state["params"]["server"],
+            "opt": {},  # FedAvg re-inits client optimizers every round
+            "step": jnp.asarray(state["round"], jnp.int32),
+        }
+
+    def from_canonical(self, canonical):
+        client = jax.tree.map(lambda a: a[0], canonical["client_banks"])
+        return {
+            "params": {"client": client, "server": canonical["server"]},
+            "round": int(canonical["step"]),
+        }
+
+
+# ------------------------------------------------------------------ session
+class SplitSession:
+    """The unified engine surface.
+
+    ``SplitSession(adapter, config, opt, engine="auto", mesh=None, seed=0,
+    **engine_options)`` — ``engine`` is a registry name (see
+    ``available_engines()``) or a prebuilt ``Engine`` instance;
+    ``engine_options`` go to the engine factory (e.g. ``threaded=``,
+    ``client_batch=`` for protocol-async; ``local_batch=`` for fedavg;
+    ``unroll=`` for the fused engines).
+    """
+
+    def __init__(self, adapter: SplitAdapter, config: SplitTrainConfig,
+                 opt: Optimizer, engine: Any = "auto", *,
+                 mesh: Optional[Mesh] = None, seed: int = 0, **engine_options):
+        self.adapter, self.config, self.opt = adapter, config, opt
+        if isinstance(engine, str):
+            try:
+                factory = _ENGINES[engine]
+            except KeyError:
+                raise ValueError(
+                    f"unknown engine {engine!r}; available: {available_engines()}"
+                ) from None
+            engine = factory(adapter, config, opt, mesh=mesh, **engine_options)
+        elif mesh is not None or engine_options:
+            raise ValueError(
+                "mesh= and engine options apply only when engine is a registry "
+                "name; configure the prebuilt engine instance directly"
+            )
+        self.engine: Engine = engine
+        self.seed = seed
+        self._native = self.engine.init(jax.random.PRNGKey(seed))
+        self.history: List[Dict[str, float]] = []
+
+    def fit(self, shards: Shards, *, epochs: int, steps_per_epoch: int,
+            eval_fn: EvalFn = None) -> List[Dict[str, float]]:
+        """Train for ``epochs x steps_per_epoch`` engine-native units and
+        return this call's history (also appended to ``self.history``).
+        ``eval_fn``, if given, receives the CANONICAL state after each epoch
+        and its dict is merged into the record under ``val_`` keys."""
+        assert len(shards) == self.config.n_clients, (
+            f"{len(shards)} shards for n_clients={self.config.n_clients}"
+        )
+        self._native, history = self.engine.run(
+            self._native, shards, epochs=epochs, steps_per_epoch=steps_per_epoch,
+            eval_fn=eval_fn,
+        )
+        self.history.extend(history)
+        return history
+
+    @property
+    def state(self):
+        """The canonical state pytree (see module docstring)."""
+        return self.engine.to_canonical(self._native)
+
+    @property
+    def native_state(self):
+        """The engine's own state representation (escape hatch for shims)."""
+        return self._native
+
+    def evaluate(self, x, y, *, batch: int = 512) -> Dict[str, Any]:
+        """Per-client evaluation: one full pass per client bank plus the
+        share-weighted mean of every metric (top-level keys). See
+        ``trainer.evaluate_per_client``."""
+        return evaluate_per_client(
+            self.adapter, self.state, x, y, batch=batch,
+            weights=np.asarray(client_weights(self.config)),
+            identical_banks=getattr(self.engine, "identical_banks", False),
+        )
+
+    def save(self, directory: str, metadata: Optional[dict] = None) -> str:
+        """Checkpoint the canonical state via ``checkpoint/io``."""
+        state = self.state
+        meta = {"engine": self.engine.name, "adapter": self.adapter.name,
+                "n_clients": self.config.n_clients, **(metadata or {})}
+        epochs_done = getattr(self.engine, "_epochs_done", None)
+        if epochs_done is not None:
+            meta["epochs_done"] = epochs_done
+        return save_checkpoint(directory, int(state["step"]), state, meta)
+
+    def restore(self, path: str) -> dict:
+        """Load a canonical checkpoint (template = this session's state
+        structure) and adopt it; returns the manifest. The engine's epoch-key
+        progress is restored too, so resuming with the ORIGINAL seed
+        continues the key schedule instead of replaying consumed epochs
+        (batch order + privacy-noise draws)."""
+        state, manifest = load_checkpoint(path, self.state)
+        self._native = self.engine.from_canonical(state)
+        epochs_done = manifest.get("metadata", {}).get("epochs_done")
+        if epochs_done is not None and hasattr(self.engine, "_epochs_done"):
+            self.engine._epochs_done = int(epochs_done)
+        return manifest

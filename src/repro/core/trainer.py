@@ -31,13 +31,16 @@ A wall-clock-faithful asynchronous queue simulation lives in
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.adapters import (
     SplitAdapter,
@@ -46,6 +49,11 @@ from repro.core.adapters import (
     per_client_metrics,
 )
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+# Mesh axis name the canonical state's leading client dimension shards over
+# (see ``repro.core.session.SplitSession(mesh=...)`` / ``launch.mesh.make_client_mesh``).
+CLIENT_AXIS = "clients"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,11 +115,33 @@ def stack_batches(
 
 
 # --------------------------------------------------------------------- steps
-def _make_fused(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
+def _shard_banked_forward(fwd_banked, mesh: Mesh, client_axis: str):
+    """shard_map the vmapped privacy layer over the mesh's client axis: each
+    hospital's bank + batch + noise key live (and differentiate) on their own
+    device. On a 1-device mesh this is a bit-exact no-op — the per-shard body
+    is the same vmapped jaxpr over the full client axis."""
+    spec = P(client_axis)
+    return shard_map(
+        fwd_banked, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_rep=False,
+    )
+
+
+def _make_fused(
+    adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer,
+    mesh: Optional[Mesh] = None, client_axis: str = CLIENT_AXIS,
+):
     """Shared core of the fused engine: (init_state, unjitted step_core)."""
     detached = tc.mode == "detached"
     weights = client_weights(tc)
     fwd_banked = banked_client_forward(adapter)
+    if mesh is not None:
+        assert client_axis in mesh.axis_names, (client_axis, mesh.axis_names)
+        assert tc.n_clients % mesh.shape[client_axis] == 0, (
+            f"n_clients={tc.n_clients} must divide over "
+            f"mesh axis {client_axis}={mesh.shape[client_axis]}"
+        )
+        fwd_banked = _shard_banked_forward(fwd_banked, mesh, client_axis)
     loss_banked = per_client_loss(adapter)
     metrics_banked = per_client_metrics(adapter)
 
@@ -194,13 +224,14 @@ def _make_fused(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
 
 
 def make_spatio_temporal_step(
-    adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
+    adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer,
+    mesh: Optional[Mesh] = None,
 ):
     """The fused engine step. Returns (init_state, step) with
     ``step(state, xs, ys, rng)`` where ``xs: [C, b, ...]``, ``ys: [C, b, ...]``
     are stacked per-client batches of homogeneous size
     ``fused_client_batch(tc)`` (see ``stack_batches``)."""
-    init_state, step_core, *_ = _make_fused(adapter, tc, opt)
+    init_state, step_core, *_ = _make_fused(adapter, tc, opt, mesh=mesh)
     return init_state, jax.jit(step_core)
 
 
@@ -310,6 +341,24 @@ def device_put_shards(
     return data_x, data_y, lens
 
 
+def make_sample_plan(tc: SplitTrainConfig, steps_per_epoch: int):
+    """Jitted (lens [C], epoch_key) -> (idx [T, C, b], step_keys [T, 2]): the
+    whole epoch's on-device batch plan from one key. Shared by the fused
+    runners and the looped reference engine so that, at equal per-client
+    batch sizes, every engine consumes byte-identical batches."""
+    c, b = tc.n_clients, fused_client_batch(tc)
+
+    @jax.jit
+    def sample_plan(lens, epoch_key):
+        k_idx, k_noise = jax.random.split(epoch_key)
+        idx = jax.random.randint(
+            k_idx, (steps_per_epoch, c, b), 0, lens[None, :, None]
+        )
+        return idx, jax.random.split(k_noise, steps_per_epoch)
+
+    return sample_plan
+
+
 def make_epoch_runner(
     adapter: SplitAdapter,
     tc: SplitTrainConfig,
@@ -318,6 +367,7 @@ def make_epoch_runner(
     *,
     unroll: int = 8,
     mode: str = "scan",
+    mesh: Optional[Mesh] = None,
 ):
     """Returns (init_state, run_epoch). ``run_epoch(state, data_x, data_y,
     lens, epoch_key)`` runs ``steps_per_epoch`` fused steps with all batch
@@ -335,18 +385,10 @@ def make_epoch_runner(
     ``train_spatio_temporal`` picks automatically."""
     assert mode in ("scan", "stepwise"), mode
     init_state, step_core, trainable_of, with_trainable, step_flat = _make_fused(
-        adapter, tc, opt
+        adapter, tc, opt, mesh=mesh
     )
-    c, b = tc.n_clients, fused_client_batch(tc)
     take = jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0))
-
-    @jax.jit
-    def sample_plan(lens, epoch_key):
-        k_idx, k_noise = jax.random.split(epoch_key)
-        idx = jax.random.randint(
-            k_idx, (steps_per_epoch, c, b), 0, lens[None, :, None]
-        )
-        return idx, jax.random.split(k_noise, steps_per_epoch)
+    sample_plan = make_sample_plan(tc, steps_per_epoch)
 
     @partial(jax.jit, donate_argnums=(0,))
     def run_epoch_scan(state, data_x, data_y, lens, epoch_key):
@@ -426,24 +468,21 @@ def train_spatio_temporal(
     eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
     epoch_mode: Optional[str] = None,
 ) -> Tuple[Any, List[Dict[str, float]]]:
-    assert len(shards) == tc.n_clients
-    data_x, data_y, lens = device_put_shards(shards)
-    init_state, run_epoch = make_epoch_runner(
-        adapter, tc, opt, steps_per_epoch,
-        mode=epoch_mode or _auto_epoch_mode(shards, tc),
+    """Deprecated shim: use ``repro.core.session.SplitSession`` (engine
+    ``auto`` / ``fused-scan`` / ``fused-stepwise``). Same key schedule, so the
+    numbers are unchanged."""
+    warnings.warn(
+        "train_spatio_temporal is deprecated; use repro.core.session.SplitSession",
+        DeprecationWarning, stacklevel=2,
     )
-    root = jax.random.PRNGKey(seed)
-    state = init_state(root)
-    history = []
-    for ep in range(epochs):
-        state, ms = run_epoch(state, data_x, data_y, lens, jax.random.fold_in(root, ep + 1))
-        ms = jax.device_get(ms)  # single readout per epoch
-        rec = {k: float(np.mean(v)) for k, v in ms.items()}
-        rec["epoch"] = ep
-        if eval_fn is not None:
-            rec.update({f"val_{k}": v for k, v in eval_fn(state).items()})
-        history.append(rec)
-    return state, history
+    from repro.core.session import SplitSession
+
+    engine = {None: "auto", "scan": "fused-scan", "stepwise": "fused-stepwise"}[epoch_mode]
+    session = SplitSession(adapter, tc, opt, engine=engine, seed=seed)
+    history = session.fit(
+        shards, epochs=epochs, steps_per_epoch=steps_per_epoch, eval_fn=eval_fn
+    )
+    return session.state, history
 
 
 def train_single_client(
@@ -457,27 +496,90 @@ def train_single_client(
     seed: int = 0,
     eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
 ):
-    single = dataclasses.replace(tc, n_clients=1, data_shares=(1.0,))
-    return train_spatio_temporal(
-        adapter, single, opt, [shard],
-        epochs=epochs, steps_per_epoch=steps_per_epoch, seed=seed, eval_fn=eval_fn,
+    """Deprecated shim: use ``SplitSession`` with ``single_client_config``."""
+    warnings.warn(
+        "train_single_client is deprecated; use "
+        "SplitSession(adapter, single_client_config(tc), opt)",
+        DeprecationWarning, stacklevel=2,
     )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return train_spatio_temporal(
+            adapter, single_client_config(tc), opt, [shard],
+            epochs=epochs, steps_per_epoch=steps_per_epoch, seed=seed, eval_fn=eval_fn,
+        )
+
+
+def single_client_config(tc: SplitTrainConfig) -> SplitTrainConfig:
+    """The conventional-split-learning baseline config: ONE client, all data."""
+    return dataclasses.replace(tc, n_clients=1, data_shares=(1.0,))
+
+
+# --------------------------------------------------------------------- eval
+@partial(jax.jit, static_argnums=(0,))
+def _eval_fwd(adapter: SplitAdapter, client, server, xb):
+    # adapter is static (frozen dataclass, hashed by identity), so the
+    # compiled forward is shared across client banks and evaluate() calls
+    return adapter.server_forward(server, adapter.client_forward(client, xb, None))
+
+
+def _eval_forward(adapter: SplitAdapter, client, server, x, batch: int):
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(_eval_fwd(adapter, client, server, jnp.asarray(x[i : i + batch]))))
+    return jnp.asarray(np.concatenate(outs, axis=0))
+
+
+def stack_pytrees(trees: Sequence[Any]) -> Any:
+    """[tree, tree, ...] -> one tree whose leaves gain a leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_pytree(tree: Any, n: int) -> List[Any]:
+    """Inverse of ``stack_pytrees`` for a known leading-axis length."""
+    return [jax.tree.map(lambda a, c=c: a[c], tree) for c in range(n)]
+
+
+def _client_banks_list(banks) -> List[Any]:
+    """Canonical stacked banks (or the looped path's list) -> list of banks."""
+    if isinstance(banks, (list, tuple)):
+        return list(banks)
+    return unstack_pytree(banks, jax.tree.leaves(banks)[0].shape[0])
 
 
 def evaluate(adapter: SplitAdapter, state, x, y, batch: int = 512) -> Dict[str, float]:
     """Full-model eval using client bank 0 (server-side metric suite)."""
-    banks = state["client_banks"]
-    if isinstance(banks, (list, tuple)):  # looped-path state
-        client0 = banks[0]
-    else:  # fused-path state: stacked leading client axis
-        client0 = jax.tree.map(lambda a: a[0], banks)
-
-    @jax.jit
-    def fwd(client, server, xb):
-        return adapter.server_forward(server, adapter.client_forward(client, xb, None))
-
-    outs = []
-    for i in range(0, len(x), batch):
-        outs.append(np.asarray(fwd(client0, state["server"], jnp.asarray(x[i : i + batch]))))
-    out = jnp.asarray(np.concatenate(outs, axis=0))
+    client0 = _client_banks_list(state["client_banks"])[0]
+    out = _eval_forward(adapter, client0, state["server"], x, batch)
     return {k: float(v) for k, v in adapter.metrics(out, jnp.asarray(y)).items()}
+
+
+def evaluate_per_client(
+    adapter: SplitAdapter, state, x, y, *,
+    batch: int = 512, weights: Optional[Sequence[float]] = None,
+    identical_banks: bool = False,
+) -> Dict[str, Any]:
+    """One eval pass PER client bank over the canonical state.
+
+    Returns the share-weighted mean of every metric at the top level plus
+    ``"per_client"``: a list of each hospital's own metric dict (its privacy
+    layer + the shared trunk). ``weights`` defaults to uniform.
+    ``identical_banks=True`` (e.g. FedAvg's tiled global client block) scores
+    one bank and replicates the row instead of running n equal passes."""
+    banks = _client_banks_list(state["client_banks"])
+    y = jnp.asarray(y)
+    per = []
+    for client in banks[:1] if identical_banks else banks:
+        out = _eval_forward(adapter, client, state["server"], x, batch)
+        per.append({k: float(v) for k, v in adapter.metrics(out, y).items()})
+    if identical_banks:
+        per = per * len(banks)
+    if weights is None:
+        weights = [1.0 / len(banks)] * len(banks)
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    result: Dict[str, Any] = {
+        k: float(sum(wc * p[k] for wc, p in zip(w, per))) for k in per[0]
+    }
+    result["per_client"] = per
+    return result

@@ -21,6 +21,20 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
     return jax.make_mesh(tuple(shape), axes)
 
 
+def make_client_mesh(n_devices=None, axis: str = "clients"):
+    """1-D mesh over the split-learning client axis: each hospital's privacy
+    bank (and its slice of the epoch data) lives on its own device. Used by
+    ``SplitSession(mesh=...)``; on a 1-device host this is the bit-exact
+    no-op mesh the CPU parity test drives."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    assert n <= len(devs), (n, len(devs))
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
 def make_host_mesh(model: int = 1):
     """Tiny mesh over whatever devices exist (CPU tests)."""
     n = len(jax.devices())

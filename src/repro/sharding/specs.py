@@ -150,6 +150,22 @@ def tree_shardings(tree, mesh: Mesh, **kw):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
 
 
+def client_bank_specs(tree, mesh: Mesh, axis: str = "clients"):
+    """PartitionSpec pytree for a canonical client-banked state fragment:
+    every leaf's LEADING dim is the stacked client axis, sharded over
+    ``axis`` (one hospital bank per device / device group). Used by
+    ``repro.core.session.SplitSession(mesh=...)``; dims the axis size does
+    not divide fall back to replication via ``_fit``."""
+
+    def spec_of(leaf):
+        shape = tuple(np.shape(leaf))
+        if not shape:
+            return P()
+        return _fit(mesh, shape, [axis] + [None] * (len(shape) - 1))
+
+    return jax.tree.map(spec_of, tree)
+
+
 def batch_specs(batch_tree, mesh: Mesh, *, banked: bool = False):
     """Input batch: leading dim (clients or batch) over the data axes."""
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

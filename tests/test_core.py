@@ -145,6 +145,27 @@ def test_protocol_trust_boundary_and_training():
     assert len(res["client_params"]) == 3
 
 
+def test_round_robin_full_queue_drains_not_drops():
+    """Seed regression: the deterministic round-robin mode ignored
+    ``queue.push``'s return value, so a full FeatureQueue silently dropped
+    batches. Now a full queue drains the server between pushes and the run
+    reports drops in queue_stats (0 here)."""
+    x, y = make_cholesterol(300, seed=0)
+    shards = split_clients(x, y)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    res = run_protocol(
+        ad, shards, adamw(1e-2), total_server_steps=9, client_batch=8,
+        data_shares=(0.7, 0.2, 0.1), queue_size=1, threaded=False,
+    )
+    stats = res["queue_stats"]
+    assert res["server_steps"] == 9
+    assert stats["dropped"] == 0
+    # every batch that was produced either trained the server or is still
+    # queued — nothing vanished
+    assert stats["pushed"] >= res["server_steps"]
+    assert stats["pushed"] - stats["popped"] <= 1  # <= queue_size
+
+
 def test_protocol_threaded_smoke():
     x, y = make_covid_ct(120, hw=16, seed=1)
     shards = split_clients(x, y)

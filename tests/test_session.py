@@ -1,0 +1,238 @@
+"""The unified `SplitSession` surface: engine parity, mesh no-op sharding,
+canonical-state uniformity, checkpoint roundtrips, per-client evaluation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig, available_engines
+from repro.core.adapters import mlp_adapter
+from repro.data import make_cholesterol, split_clients
+from repro.launch.mesh import make_client_mesh
+from repro.optim import adamw
+
+UNIFORM = SplitTrainConfig(server_batch=48, data_shares=(1.0, 1.0, 1.0))
+WEIGHTED = SplitTrainConfig(server_batch=48)  # the paper's 7:2:1
+
+
+@pytest.fixture(scope="module")
+def chol_shards():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y), (x[:100], y[:100])
+
+
+def _losses(adapter, tc, shards, engine, *, epochs=2, steps=4, seed=0, **kw):
+    session = SplitSession(adapter, tc, adamw(1e-2), engine=engine, seed=seed, **kw)
+    hist = session.fit(shards, epochs=epochs, steps_per_epoch=steps)
+    return session, [h["loss"] for h in hist]
+
+
+def test_registry_lists_all_engines():
+    assert {"auto", "fused-scan", "fused-stepwise", "looped-ref",
+            "protocol-async", "fedavg"} <= set(available_engines())
+    with pytest.raises(ValueError, match="unknown engine"):
+        SplitSession(mlp_adapter(CHOLESTEROL_MLP), UNIFORM, adamw(1e-2),
+                     engine="no-such-engine")
+    # a prebuilt engine instance cannot silently drop session-level options
+    from repro.core.session import _ENGINES
+    prebuilt = _ENGINES["fused-scan"](mlp_adapter(CHOLESTEROL_MLP), UNIFORM, adamw(1e-2))
+    with pytest.raises(ValueError, match="prebuilt engine"):
+        SplitSession(mlp_adapter(CHOLESTEROL_MLP), UNIFORM, adamw(1e-2),
+                     engine=prebuilt, mesh=make_client_mesh(1))
+
+
+# ------------------------------------------------------------ engine parity
+def test_fused_and_looped_engines_agree_uniform_shares(chol_shards):
+    """Uniform shares + the shared on-device sample plan => all three SPMD
+    engines consume byte-identical batches and optimize the same objective:
+    losses agree to fp32 reassociation, scan vs stepwise exactly."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    _, scan = _losses(ad, UNIFORM, shards, "fused-scan")
+    _, stepw = _losses(ad, UNIFORM, shards, "fused-stepwise")
+    _, looped = _losses(ad, UNIFORM, shards, "looped-ref")
+    assert scan == stepw, "scan and stepwise are the same math in the same order"
+    np.testing.assert_allclose(scan, looped, rtol=1e-4)
+
+
+def test_fused_vs_looped_weighted_shares_within_tolerance(chol_shards):
+    """7:2:1 shares: the fused engine weights per-client losses, the looped
+    reference concat-means them — same batches, slightly different objective.
+    First-epoch losses stay close; both must converge."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    _, fused = _losses(ad, WEIGHTED, shards, "fused-scan", epochs=3)
+    _, looped = _losses(ad, WEIGHTED, shards, "looped-ref", epochs=3)
+    np.testing.assert_allclose(fused[0], looped[0], rtol=0.1)
+    assert fused[-1] < fused[0] and looped[-1] < looped[0]
+
+
+def test_protocol_async_converges_through_session(chol_shards):
+    shards, (xt, yt) = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session, losses = _losses(
+        ad, WEIGHTED, shards, "protocol-async", epochs=3, steps=10,
+        threaded=False,
+    )
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    assert session.engine.stats["dropped"] == 0
+    st = session.state
+    assert jax.tree.leaves(st["client_banks"])[0].shape[0] == 3
+    assert int(st["step"]) == 30
+    ev = session.evaluate(xt, yt)
+    assert len(ev["per_client"]) == 3 and np.isfinite(ev["msle"])
+
+
+def test_fedavg_converges_through_session(chol_shards):
+    shards, (xt, yt) = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session, losses = _losses(ad, WEIGHTED, shards, "fedavg", epochs=4, steps=5)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    st = session.state
+    # FedAvg's canonical banks are n tiled copies of the one global client
+    assert jax.tree.leaves(st["client_banks"])[0].shape[0] == 3
+    ev = session.evaluate(xt, yt)
+    per = [p["loss"] for p in ev["per_client"]]
+    assert per[0] == per[1] == per[2]  # identical banks => identical rows
+
+
+def test_canonical_state_uniform_across_engines(chol_shards):
+    """Every engine exposes the SAME canonical surface: stacked banks,
+    server, opt, int32 step."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    for engine, kw in [("fused-scan", {}), ("looped-ref", {}),
+                       ("protocol-async", {"threaded": False}), ("fedavg", {})]:
+        session = SplitSession(ad, WEIGHTED, adamw(1e-2), engine=engine, **kw)
+        session.fit(shards, epochs=1, steps_per_epoch=2)
+        st = session.state
+        assert set(st) == {"client_banks", "server", "opt", "step"}, engine
+        assert jax.tree.leaves(st["client_banks"])[0].shape[0] == 3, engine
+        assert st["step"].dtype == jnp.int32, engine
+
+
+# ------------------------------------------------------------- mesh sharding
+def test_mesh_noop_bitmatches_unsharded_on_cpu(chol_shards):
+    """A 1-device client mesh must be a bit-exact no-op — including in e2e
+    mode, where gradients flow THROUGH the shard_mapped privacy layer."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = dataclasses.replace(UNIFORM, mode="e2e")
+    runs = {}
+    for name, mesh in (("plain", None), ("mesh", make_client_mesh(1))):
+        session = SplitSession(ad, tc, adamw(1e-2), engine="fused-scan", mesh=mesh)
+        hist = session.fit(shards, epochs=2, steps_per_epoch=4)
+        runs[name] = (hist, session.state)
+    assert runs["plain"][0] == runs["mesh"][0]
+    for a, b in zip(jax.tree.leaves(runs["plain"][1]), jax.tree.leaves(runs["mesh"][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mesh_rejected_by_host_engines(chol_shards):
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    for engine in ("looped-ref", "protocol-async", "fedavg"):
+        with pytest.raises(ValueError, match="mesh"):
+            SplitSession(ad, UNIFORM, adamw(1e-2), engine=engine,
+                         mesh=make_client_mesh(1))
+
+
+def test_e2e_mode_rejected_by_detached_only_engines():
+    """protocol-async is structurally detached and fedavg trains full local
+    models — both must reject mode='e2e' instead of silently ignoring it."""
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    e2e = dataclasses.replace(WEIGHTED, mode="e2e")
+    for engine in ("protocol-async", "fedavg"):
+        with pytest.raises(ValueError, match="e2e|mode"):
+            SplitSession(ad, e2e, adamw(1e-2), engine=engine)
+
+
+def test_protocol_repeated_fits_draw_fresh_batches(chol_shards):
+    """A second fit (or restore-then-fit) must not replay the first fit's
+    client batch/noise sequence: the client RNG base advances with the
+    consumed server steps (and stays exactly legacy at step 0)."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session = SplitSession(ad, WEIGHTED, adamw(1e-2), engine="protocol-async",
+                           threaded=False)
+    assert session.engine._noise_seed_for(0) == session.engine._noise_seed
+    session.fit(shards, epochs=1, steps_per_epoch=5)
+    seed_before = session.engine._noise_seed_for(0)
+    seed_after = session.engine._noise_seed_for(int(session.state["step"]))
+    assert seed_after != seed_before
+    session.fit(shards, epochs=1, steps_per_epoch=5)  # trains on fresh draws
+    assert int(session.state["step"]) == 10
+
+
+# ------------------------------------------------------ checkpoint roundtrip
+def test_save_restore_roundtrip_and_resume(tmp_path, chol_shards):
+    shards, (xt, yt) = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = dataclasses.replace(UNIFORM, mode="e2e")  # banks + opt all trainable
+    session = SplitSession(ad, tc, adamw(1e-2), engine="fused-scan", seed=0)
+    session.fit(shards, epochs=1, steps_per_epoch=4)
+    path = session.save(str(tmp_path))
+
+    fresh = SplitSession(ad, tc, adamw(1e-2), engine="fused-scan", seed=0)
+    manifest = fresh.restore(path)
+    assert manifest["metadata"]["engine"] == "fused-scan"
+    # epoch-key progress restores too: resuming with the SAME seed must use
+    # fresh epoch keys, not replay the consumed ones
+    assert fresh.engine._epochs_done == 1
+    for a, b in zip(jax.tree.leaves(session.state), jax.tree.leaves(fresh.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert session.evaluate(xt, yt) == fresh.evaluate(xt, yt)
+    hist_resumed = fresh.fit(shards, epochs=1, steps_per_epoch=4)
+    hist_continued = session.fit(shards, epochs=1, steps_per_epoch=4)
+    assert int(fresh.state["step"]) == 8
+    assert hist_resumed[0]["loss"] == hist_continued[0]["loss"]  # same schedule
+
+
+def test_save_restore_across_looped_engine(tmp_path, chol_shards):
+    """The looped engine's list-of-banks native state roundtrips through the
+    canonical stacked layout (including e2e optimizer moments)."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = dataclasses.replace(UNIFORM, mode="e2e")
+    session = SplitSession(ad, tc, adamw(1e-2), engine="looped-ref", seed=0)
+    session.fit(shards, epochs=1, steps_per_epoch=2)
+    path = session.save(str(tmp_path))
+    fresh = SplitSession(ad, tc, adamw(1e-2), engine="looped-ref", seed=9)
+    fresh.restore(path)
+    for a, b in zip(jax.tree.leaves(session.state), jax.tree.leaves(fresh.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    fresh.fit(shards, epochs=1, steps_per_epoch=2)
+
+
+# --------------------------------------------------------- per-client eval
+def test_evaluate_reports_per_client_and_weighted_mean(chol_shards):
+    shards, (xt, yt) = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session = SplitSession(ad, WEIGHTED, adamw(1e-2))
+    session.fit(shards, epochs=1, steps_per_epoch=4)
+    ev = session.evaluate(xt, yt)
+    assert len(ev["per_client"]) == 3
+    w = np.asarray(WEIGHTED.data_shares) / np.sum(WEIGHTED.data_shares)
+    for k in ("loss", "msle", "rmsle", "smape"):
+        manual = float(sum(wc * p[k] for wc, p in zip(w, ev["per_client"])))
+        np.testing.assert_allclose(ev[k], manual, rtol=1e-6)
+
+
+def test_deprecated_entry_points_warn_and_delegate(chol_shards):
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    from repro.core.trainer import train_spatio_temporal
+
+    with pytest.deprecated_call():
+        state, hist = train_spatio_temporal(
+            ad, UNIFORM, adamw(1e-2), shards, epochs=1, steps_per_epoch=2
+        )
+    assert len(hist) == 1
+    # the shim reproduces the session's exact numbers (same key schedule)
+    session = SplitSession(ad, UNIFORM, adamw(1e-2))
+    hist2 = session.fit(shards, epochs=1, steps_per_epoch=2)
+    assert hist[0]["loss"] == hist2[0]["loss"]
