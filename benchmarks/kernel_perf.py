@@ -45,6 +45,23 @@ def bench_privacy_conv() -> List[Row]:
     return [("kernel/privacy_conv_64x64", us, f"pallas_vs_ref_maxerr={err:.2e}")]
 
 
+def bench_dp_release() -> List[Row]:
+    from repro.kernels.dp_release.kernel import dp_release_pallas
+    from repro.kernels.dp_release.ref import dp_release_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    # the COVID CT cut feature map: [B, 32, 32, 16] post conv+pool
+    B, H, W, C = 8, 32, 32, 16
+    x = jax.random.normal(ks[0], (B, H, W, C)) * 2
+    nz = jax.random.normal(ks[1], (B, H, W, C))
+    ref = jax.jit(lambda *a: dp_release_ref(*a, clip_norm=1.0, sigma=0.05))
+    us = _time(ref, x, nz)
+    err = float(jnp.max(jnp.abs(
+        dp_release_pallas(x, nz, clip_norm=1.0, sigma=0.05, interpret=True)
+        - dp_release_ref(x, nz, clip_norm=1.0, sigma=0.05))))
+    return [("kernel/dp_release_32x32x16", us, f"pallas_vs_ref_maxerr={err:.2e}")]
+
+
 def bench_flash_attention() -> List[Row]:
     from repro.kernels.flash_attention.kernel import flash_attention_pallas
     from repro.kernels.flash_attention.ref import flash_attention_ref

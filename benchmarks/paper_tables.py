@@ -163,7 +163,7 @@ def fig7_privacy_inversion() -> List[Row]:
     depth and privacy noise (higher MSE / lower NCC = stronger privacy)."""
     import jax.numpy as jnp
 
-    from repro.core.inversion import inversion_attack_report
+    from repro.privacy.audit import inversion_attack_report
 
     x, _ = make_covid_ct(1, hw=32, seed=0)
     x = jnp.asarray(x)

@@ -35,6 +35,7 @@ def main(argv=None) -> None:
         ("table7", paper_tables.table7_cholesterol),
         ("privacy", paper_tables.fig7_privacy_inversion),
         ("kernel", kernel_perf.bench_privacy_conv),
+        ("kernel", kernel_perf.bench_dp_release),
         ("kernel", kernel_perf.bench_flash_attention),
         ("kernel", kernel_perf.bench_selective_scan),
         ("trainer", trainer_perf.bench_fused_vs_looped),

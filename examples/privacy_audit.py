@@ -1,0 +1,83 @@
+"""Privacy audit end-to-end: train with the PrivacyGuard at the cut, read
+the (ε, δ) budget off the session state, prove it survives a checkpoint
+round-trip, and run the inversion attack across guard noise levels.
+
+Three hospitals train the demo COVID-CT CNN through ``SplitSession`` with a
+mechanism-calibrated guard (per-sample clip + Gaussian noise at the cut).
+The accountant's budget leaves ride in the canonical state, so the report
+after ``save``/``restore`` matches exactly; the audit then shows
+reconstruction MSE rising with σ — the paper's §IV-D2 non-invertibility
+claim as a number.
+
+  PYTHONPATH=src python examples/privacy_audit.py
+  PYTHONPATH=src python examples/privacy_audit.py --n 120 --epochs 1 \
+      --steps-per-epoch 3 --inversion-steps 12      # CI smoke
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.configs.paper_models import COVID_CNN
+from repro.core import DPConfig, SplitSession, SplitTrainConfig
+from repro.core.adapters import cnn_adapter
+from repro.data import make_covid_ct, split_clients
+from repro.optim import adamw
+from repro.privacy import composed_epsilon
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--steps-per-epoch", type=int, default=6)
+    ap.add_argument("--inversion-steps", type=int, default=60)
+    ap.add_argument("--sigmas", type=float, nargs="*", default=[0.0, 0.5, 4.0])
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        COVID_CNN, input_hw=(16, 16), stages=((8, 1), (16, 1)),
+        dense_units=(16,),
+    )
+    dp = DPConfig(epsilon=2.0, delta=1e-5, clip_norm=2.0)
+    tc = SplitTrainConfig(server_batch=24, privacy=dp)
+    x, y = make_covid_ct(args.n, hw=16, seed=0)
+    shards = split_clients(x, y, shares=tc.data_shares)
+
+    print(f"guard: clip={dp.clip_norm}  sigma={dp.sigma:.3f}  "
+          f"(eps={dp.epsilon}, delta={dp.delta} per release)")
+    session = SplitSession(cnn_adapter(cfg), tc, adamw(1e-3))
+    session.fit(shards, epochs=args.epochs, steps_per_epoch=args.steps_per_epoch)
+
+    rep = session.privacy_report()
+    expect = composed_epsilon(dp, int(session.state["step"]))
+    print(f"\nbudget after fit: releases={rep['releases']}  "
+          f"basic_eps={rep['basic_epsilon']:.2f}  "
+          f"advanced_eps={rep['advanced_epsilon']:.2f}  delta={rep['delta']:.2e}")
+    assert rep["basic_epsilon"] == expect["basic_epsilon"], "accountant drifted"
+
+    with tempfile.TemporaryDirectory() as d:
+        path = session.save(d)
+        fresh = SplitSession(cnn_adapter(cfg), tc, adamw(1e-3))
+        fresh.restore(path)
+        assert fresh.privacy_report() == rep, "budget lost in checkpoint"
+        print("budget survives save/restore: OK")
+
+    print(f"\ninversion audit ({args.inversion_steps} attack steps/σ):")
+    print(f"{'sigma':>8} {'mse':>10} {'psnr_db':>9} {'ncc':>7}")
+    rows = session.audit_privacy(
+        jnp.asarray(x[:1]), sigmas=tuple(args.sigmas),
+        steps=args.inversion_steps,
+    )
+    for r in rows:
+        print(f"{r['sigma']:>8.2f} {r['mse']:>10.5f} {r['psnr_db']:>9.2f} "
+              f"{r['ncc']:>7.3f}")
+    mses = [r["mse"] for r in rows]
+    assert mses == sorted(mses), "reconstruction MSE should rise with σ"
+    print("\nreconstruction error rises with guard σ "
+          "(paper §IV-D2, quantified)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,13 @@
 - trainer:    fused SPMD multi-client trainers for the paper's CNN/MLP models
 - distributed: multi-client split learning over the assigned LLM architectures
 - fedavg:     the federated-learning baseline the paper compares against
-- inversion:  model-inversion attack used as the privacy metric
+
+The privacy subsystem (PrivacyGuard at the cut, (ε, δ) accountant, the
+inversion audit) lives in ``repro.privacy``; ``core.dp`` and
+``core.inversion`` are deprecated shims over it.
 """
 from repro.core.queue import FeatureQueue
+from repro.privacy.guard import DPConfig, PrivacyGuard
 from repro.core.trainer import (
     CLIENT_AXIS,
     SplitTrainConfig,

@@ -37,9 +37,20 @@ class SplitAdapter:
 # Banked (vmapped-over-clients) views used by the fused trainer: every
 # argument gains a leading client axis C — stacked parameter banks
 # [C, ...pytree], batches [C, b, ...], PRNG keys [C, 2].
-def banked_client_forward(adapter: SplitAdapter) -> Callable[..., Any]:
-    """(stacked_banks, xs, noise_keys) -> features [C, b, ...]."""
-    return jax.vmap(adapter.client_forward)
+def banked_client_forward(adapter: SplitAdapter, guard=None) -> Callable[..., Any]:
+    """(stacked_banks, xs, noise_keys) -> features [C, b, ...].
+
+    With an enabled ``repro.privacy.PrivacyGuard`` the release (clip →
+    Gaussian mechanism → quantize) runs INSIDE the vmapped client forward,
+    on a fold-in of each client's per-step key — so the guard vectorizes
+    over the client axis and shard_maps with it under a device mesh."""
+    if guard is None or not guard.enabled:
+        return jax.vmap(adapter.client_forward)
+
+    def fwd(bank, x, key):
+        return guard(guard.key_for(key), adapter.client_forward(bank, x, key))
+
+    return jax.vmap(fwd)
 
 
 def per_client_loss(adapter: SplitAdapter) -> Callable[..., jnp.ndarray]:

@@ -1,69 +1,23 @@
-"""Differentially-private feature release at the privacy cut.
+"""DEPRECATED shim — the DP release moved to ``repro.privacy``.
 
-The paper names differential privacy as future work (§V); this module
-implements it: the client clips each feature map to a fixed L2 norm and adds
-Gaussian noise calibrated by the Gaussian mechanism, so one queue push is
-(ε, δ)-DP with respect to the sample that produced it.
-
-  sigma = sensitivity * sqrt(2 ln(1.25/δ)) / ε      (Dwork & Roth, Thm 3.22)
-
-where sensitivity = 2 * clip_norm (replacing one sample can move a clipped
-per-sample feature map by at most twice the clip radius). Composition over T
-releases is tracked with basic and advanced composition bounds.
+The clip + Gaussian-mechanism release is now the job of
+``repro.privacy.PrivacyGuard`` (applied at the cut by every engine), the
+composition bookkeeping lives in ``repro.privacy.accountant``, and the fused
+clip+noise kernel in ``repro.kernels.dp_release``. This module re-exports the
+old names so existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
+import warnings
 
-import jax
-import jax.numpy as jnp
+warnings.warn(
+    "repro.core.dp is deprecated; use repro.privacy (PrivacyGuard, DPConfig, "
+    "accountant) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
+from repro.privacy.accountant import composed_epsilon  # noqa: E402
+from repro.privacy.guard import DPConfig, clip_per_sample, dp_release  # noqa: E402
 
-@dataclasses.dataclass(frozen=True)
-class DPConfig:
-    epsilon: float = 1.0
-    delta: float = 1e-5
-    clip_norm: float = 1.0
-
-    @property
-    def sigma(self) -> float:
-        if self.epsilon <= 0:
-            raise ValueError("epsilon must be positive")
-        sens = 2.0 * self.clip_norm
-        return sens * math.sqrt(2.0 * math.log(1.25 / self.delta)) / self.epsilon
-
-
-def clip_per_sample(features: jnp.ndarray, clip_norm: float) -> jnp.ndarray:
-    """L2-clip each sample's feature map (leading dim = batch)."""
-    flat = features.reshape(features.shape[0], -1)
-    norms = jnp.linalg.norm(flat.astype(jnp.float32), axis=-1, keepdims=True)
-    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
-    return (flat * scale).reshape(features.shape).astype(features.dtype)
-
-
-def dp_release(key, features: jnp.ndarray, dp: DPConfig) -> jnp.ndarray:
-    """Clip + Gaussian-mechanism noise: the (ε, δ)-DP feature map the client
-    is allowed to push into the server queue."""
-    clipped = clip_per_sample(features, dp.clip_norm)
-    noise = dp.sigma * jax.random.normal(key, features.shape, jnp.float32)
-    return (clipped.astype(jnp.float32) + noise).astype(features.dtype)
-
-
-def composed_epsilon(dp: DPConfig, releases: int, delta_prime: float = 1e-6) -> dict:
-    """Privacy spent after `releases` pushes from one client.
-
-    Returns both the basic (linear) bound and the advanced-composition bound
-    (Dwork & Roth Thm 3.20): eps' = eps*sqrt(2T ln(1/δ')) + T eps(e^eps - 1).
-    """
-    t = releases
-    basic = t * dp.epsilon
-    adv = dp.epsilon * math.sqrt(2 * t * math.log(1 / delta_prime)) + t * dp.epsilon * (
-        math.exp(dp.epsilon) - 1
-    )
-    return {
-        "basic_epsilon": basic,
-        "advanced_epsilon": adv,
-        "delta": t * dp.delta + delta_prime,
-        "releases": t,
-    }
+__all__ = ["DPConfig", "clip_per_sample", "composed_epsilon", "dp_release"]

@@ -14,21 +14,32 @@ import numpy as np
 from repro.core.adapters import SplitAdapter
 from repro.core.trainer import SplitTrainConfig
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.privacy.guard import PrivacyGuard
 
 
 def make_local_sgd(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):
-    """One client's jitted full-model SGD step (build once, reuse per round)."""
+    """One client's jitted full-model SGD step (build once, reuse per round).
+
+    With ``tc.privacy`` set, the ``PrivacyGuard`` releases at the cut inside
+    local training too — features never leave the client under FedAvg, but
+    running the same mechanism keeps the utility comparison against split
+    learning apples-to-apples (and the accountant counts the applications).
+    ``noise_key`` is ignored when the guard is off (the jitted step drops
+    the dead argument), preserving exact legacy numbers.
+    """
+    guard = PrivacyGuard.from_config(tc.privacy)
 
     @jax.jit
-    def local_sgd(params, opt_state, x, y, step):
+    def local_sgd(params, opt_state, x, y, step, noise_key):
         def lf(p):
-            out = adapter.server_forward(
-                p["server"], adapter.client_forward(p["client"], x, None)
-            )
+            feats = adapter.client_forward(p["client"], x, None)
+            if guard.enabled:
+                feats = guard(guard.key_for(noise_key), feats)
+            out = adapter.server_forward(p["server"], feats)
             return adapter.loss(out, y)
 
         loss, grads = jax.value_and_grad(lf)(params)
-        grads, _ = clip_by_global_norm(grads, tc.clip_norm)
+        grads, _ = clip_by_global_norm(grads, tc.grad_clip)
         updates, opt_state = opt.update(grads, opt_state, params, step)
         return apply_updates(params, updates), opt_state, loss
 
@@ -49,14 +60,18 @@ def fedavg_rounds(
     round_offset: int = 0,
     local_sgd: Optional[Callable] = None,
     eval_fn: Optional[Callable[[Any], Dict[str, float]]] = None,
+    noise_key=None,
 ) -> Tuple[Any, List[Dict[str, float]]]:
     """The FedAvg loop from the given ``global_params``; resumable via
-    ``round_offset`` (keeps optimizer step counts monotonic across calls)."""
+    ``round_offset`` (keeps optimizer step counts monotonic across calls).
+    ``noise_key`` seeds the guard's fold-in schedule — unique per (client,
+    absolute round, local step), so a resumed run continues the stream."""
     n = tc.n_clients
     weights = np.asarray(tc.data_shares, np.float64)
     weights = weights / weights.sum()
     rng = rng if rng is not None else np.random.default_rng(0)
     local_sgd = local_sgd if local_sgd is not None else make_local_sgd(adapter, tc, opt)
+    noise_key = noise_key if noise_key is not None else jax.random.PRNGKey(0)
 
     history: List[Dict[str, float]] = []
     for rnd in range(round_offset, round_offset + rounds):
@@ -71,6 +86,7 @@ def fedavg_rounds(
                 params, opt_state, loss = local_sgd(
                     params, opt_state, jnp.asarray(x_c[idx]), jnp.asarray(y_c[idx]),
                     jnp.asarray(rnd * local_steps + s, jnp.int32),
+                    jax.random.fold_in(noise_key, (rnd * n + c) * local_steps + s),
                 )
             locals_.append(params)
             losses.append(float(loss))

@@ -1,65 +1,25 @@
-"""Model-inversion attack as a *quantitative* privacy metric.
+"""DEPRECATED shim — the inversion privacy metric moved to ``repro.privacy.audit``.
 
-The paper argues (§IV-D2, Figs. 2/7/8) that post-cut feature maps are visually
-non-invertible. We go further and measure it: a white-box attacker who knows
-the client's privacy-layer parameters and observes the transmitted feature map
-optimizes a reconstruction x' minimizing ||f(x') - f(x)||^2. The privacy score
-is the reconstruction error (MSE / PSNR) vs the true input — higher MSE =
-stronger privacy. Comparing cut depths / noise levels reproduces the paper's
-qualitative claim as a number.
+The attack is now a first-class session capability:
+``SplitSession.audit_privacy()`` sweeps the guard's noise level and reports
+MSE/PSNR/NCC per σ. This module re-exports the old names so existing imports
+keep working.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import warnings
 
-import jax
-import jax.numpy as jnp
+warnings.warn(
+    "repro.core.inversion is deprecated; use repro.privacy.audit "
+    "(or SplitSession.audit_privacy)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
+from repro.privacy.audit import (  # noqa: E402
+    inversion_attack_report,
+    invert_features,
+    privacy_metrics,
+)
 
-def invert_features(
-    client_forward: Callable[[jnp.ndarray], jnp.ndarray],
-    target_features: jnp.ndarray,
-    x_shape,
-    *,
-    steps: int = 300,
-    lr: float = 0.05,
-    seed: int = 0,
-) -> jnp.ndarray:
-    """Gradient-descent inversion: argmin_x ||client_forward(x) - f*||^2."""
-    x0 = 0.5 + 0.01 * jax.random.normal(jax.random.PRNGKey(seed), x_shape)
-
-    def loss(x):
-        return jnp.mean(jnp.square(client_forward(x) - target_features))
-
-    @jax.jit
-    def step(x, _):
-        g = jax.grad(loss)(x)
-        return jnp.clip(x - lr * jnp.sign(g) * 0.01 - lr * g, 0.0, 1.0), None
-
-    x, _ = jax.lax.scan(step, x0, None, length=steps)
-    return x
-
-
-def privacy_metrics(x_true: jnp.ndarray, x_rec: jnp.ndarray) -> Dict[str, float]:
-    mse = float(jnp.mean(jnp.square(x_true - x_rec)))
-    psnr = float(10.0 * jnp.log10(1.0 / max(mse, 1e-12)))
-    # normalized cross-correlation: 1 = perfectly reconstructed structure
-    xt = x_true - jnp.mean(x_true)
-    xr = x_rec - jnp.mean(x_rec)
-    denom = jnp.sqrt(jnp.sum(xt**2) * jnp.sum(xr**2)) + 1e-9
-    ncc = float(jnp.sum(xt * xr) / denom)
-    return {"mse": mse, "psnr_db": psnr, "ncc": ncc}
-
-
-def inversion_attack_report(
-    client_forward, x_true: jnp.ndarray, *, steps: int = 300, seed: int = 0,
-    attacker_forward: Callable = None,
-) -> Dict[str, float]:
-    """``client_forward`` produces the observed features (WITH the client's
-    private noise); the attacker optimizes through ``attacker_forward``
-    (defaults to the same fn) — pass the noise-free forward there to model an
-    attacker who knows the weights but NOT the noise realization."""
-    f_star = jax.lax.stop_gradient(client_forward(x_true))
-    atk = attacker_forward or client_forward
-    x_rec = invert_features(atk, f_star, x_true.shape, steps=steps, seed=seed)
-    return privacy_metrics(x_true, x_rec)
+__all__ = ["invert_features", "inversion_attack_report", "privacy_metrics"]

@@ -24,27 +24,51 @@ import numpy as np
 from repro.core.adapters import SplitAdapter
 from repro.core.queue import FeatureQueue
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.privacy.guard import PrivacyGuard
 
 
 class SplitClient:
-    """A hospital: private data + the privacy-preserving layer ONLY."""
+    """A hospital: private data + the privacy-preserving layer ONLY.
+
+    Noise keys are fold-ins of a JAX base key (``noise_key``, default
+    derived from ``noise_seed + client_id``) advanced per produced batch —
+    NOT host NumPy draws — so protocol releases follow the same
+    reproducible key discipline as the fused engines and an enabled
+    ``PrivacyGuard`` releases through the exact same mechanism. This
+    deliberately changes the legacy stream: the old per-push
+    ``rng.integers(1 << 31)`` noise-seed draw is gone, so both the noise
+    keys AND the batch-index sequence differ from the pre-guard protocol.
+    ``releases`` counts every batch that left the privacy layer (whether or
+    not the queue accepted it) for the (ε, δ) accountant.
+    """
 
     def __init__(self, client_id: int, adapter: SplitAdapter, client_params,
                  data: Tuple[np.ndarray, np.ndarray], batch: int,
-                 noise_seed: int = 0):
+                 noise_seed: int = 0, *, noise_key=None,
+                 guard: Optional[PrivacyGuard] = None):
         self.client_id = client_id
         self.adapter = adapter
         self.params = client_params  # never leaves this object
         self.x, self.y = data
         self.batch = batch
-        self._rng = np.random.default_rng(noise_seed + client_id)
-        self._fwd = jax.jit(lambda p, x, k: adapter.client_forward(p, x, k))
+        self.releases = 0
+        self._rng = np.random.default_rng(noise_seed + client_id)  # batch sampling
+        self._key = (noise_key if noise_key is not None
+                     else jax.random.PRNGKey(noise_seed + client_id))
+        guard = guard if guard is not None else PrivacyGuard()
+        if guard.enabled:
+            self._fwd = jax.jit(
+                lambda p, x, k: guard(guard.key_for(k), adapter.client_forward(p, x, k))
+            )
+        else:
+            self._fwd = jax.jit(lambda p, x, k: adapter.client_forward(p, x, k))
 
     def produce(self):
-        """One queue item: (encrypted feature map, labels). Raw x never returned."""
+        """One queue item: (released feature map, labels). Raw x never returned."""
         idx = self._rng.integers(0, len(self.x), size=self.batch)
         xb = jnp.asarray(self.x[idx])
-        key = jax.random.PRNGKey(int(self._rng.integers(1 << 31)))
+        self.releases += 1
+        key = jax.random.fold_in(self._key, self.releases)
         features = self._fwd(self.params, xb, key)
         return np.asarray(features), self.y[idx]
 

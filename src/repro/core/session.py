@@ -19,6 +19,10 @@ Canonical state::
       "step":         int32 progress counter in the engine's native unit
                       (fused/looped: optimizer steps; protocol: server steps;
                       fedavg: rounds),
+      "privacy":      the (ε, δ) accountant's budget leaves (int32 release
+                      count + float32 basic-composition spend) — advanced by
+                      every engine's guard applications and checkpointed
+                      with the rest of the state,
     }
 
 Engines register by name (see ``available_engines()``); ``engine="auto"``
@@ -51,6 +55,7 @@ from repro.core.trainer import (
     CLIENT_AXIS,
     SplitTrainConfig,
     _auto_epoch_mode,
+    _client_banks_list,
     client_weights,
     device_put_shards,
     evaluate_per_client,
@@ -63,6 +68,9 @@ from repro.core.trainer import (
     unstack_pytree,
 )
 from repro.optim.optimizers import Optimizer
+from repro.privacy.accountant import budget_advance, budget_init, budget_report
+from repro.privacy.audit import guard_noise_sweep
+from repro.privacy.guard import PrivacyGuard
 
 Shards = Sequence[Tuple[np.ndarray, np.ndarray]]
 EvalFn = Optional[Callable[[Any], Dict[str, float]]]
@@ -270,6 +278,7 @@ class LoopedEngine:
             "server": state["server"],
             "opt": self._map_trainable_banks(state["opt"], stack_pytrees),
             "step": jnp.asarray(state["step"], jnp.int32),
+            "privacy": state["privacy"],
         }
 
     def from_canonical(self, canonical):
@@ -281,6 +290,7 @@ class LoopedEngine:
                 canonical["opt"], lambda t: unstack_pytree(t, n)
             ),
             "step": canonical["step"],
+            "privacy": canonical["privacy"],
         }
 
 
@@ -310,11 +320,13 @@ class ProtocolEngine:
         self.threaded = threaded
         self.client_batch = client_batch or fused_client_batch(tc)
         self.queue_size, self.per_client_cap = queue_size, per_client_cap
+        self.guard = PrivacyGuard.from_config(tc.privacy)
         self.losses: List[float] = []
-        self.stats: Dict[str, int] = {}
+        self.stats: Dict[str, Any] = {}
 
     def init(self, key):
         self._noise_seed = _seed_from_key(key)
+        self._root_key = key
         ref = self.adapter.init(key)
         banks = [
             self.adapter.init(jax.random.fold_in(key, c + 1))["client"]
@@ -325,14 +337,25 @@ class ProtocolEngine:
             "server": ref["server"],
             "opt": self.opt.init(ref["server"]),
             "step": 0,
+            "privacy": budget_init(),
         }
 
     def _noise_seed_for(self, step: int) -> int:
-        """Per-run client RNG base, advanced by consumed server steps so a
-        second fit (or a restore-then-fit) draws FRESH batches and noise
-        keys instead of replaying the first fit's sequence. step=0 keeps
-        exact legacy ``run_protocol`` behavior."""
+        """Per-run client RNG base (batch SAMPLING), advanced by consumed
+        server steps so a second fit (or a restore-then-fit) draws FRESH
+        batches instead of replaying the first fit's sequence. step=0 keeps
+        the legacy ``run_protocol`` seed derivation — note the sampled
+        index STREAM still differs from PR 2 (clients no longer interleave
+        noise-seed draws into the sampling Generator; see ``SplitClient``)."""
         return self._noise_seed + 100003 * int(step)
+
+    def _noise_key_for(self, step: int, client_id: int):
+        """Per-client JAX noise base key, advanced by consumed server steps
+        — the fold-in discipline all engines share (the clients fold their
+        own per-push counter on top of this base)."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self._root_key, int(step)), client_id
+        )
 
     def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
         assert len(shards) == self.tc.n_clients
@@ -345,12 +368,14 @@ class ProtocolEngine:
                 c, self.adapter, state["client_banks"][c], shards[c],
                 batch=self.client_batch,
                 noise_seed=self._noise_seed_for(state["step"]),
+                noise_key=self._noise_key_for(state["step"], c),
+                guard=self.guard,
             )
             for c in range(self.tc.n_clients)
         ]
         server = protocol_mod.SplitServer(
             self.adapter, state["server"], self.opt, queue,
-            clip_norm=self.tc.clip_norm,
+            clip_norm=self.tc.grad_clip,
             opt_state=state["opt"], step_count=int(state["step"]),
         )
         dropped = 0
@@ -364,18 +389,25 @@ class ProtocolEngine:
             losses = server.losses[-steps_per_epoch:]
             rec = {"epoch": ep, "loss": float(np.mean(losses)),
                    "server_steps": server.step_count}
+            # per-client budget: the WORST-CASE client's release count this
+            # run (every produced batch left the privacy layer, whether or
+            # not the queue accepted it)
+            released = max(c.releases for c in clients)
             new_state = {
                 "client_banks": [c.params for c in clients],
                 "server": server.params,
                 "opt": server.opt_state,
                 "step": server.step_count,
+                "privacy": budget_advance(state["privacy"], self.tc.privacy, released)
+                if self.guard.enabled else state["privacy"],
             }
             if eval_fn is not None:
                 rec.update({f"val_{k}": v
                             for k, v in eval_fn(self.to_canonical(new_state)).items()})
             history.append(rec)
         self.losses.extend(server.losses)
-        self.stats = {**queue.stats(), "dropped": dropped}
+        self.stats = {**queue.stats(), "dropped": dropped,
+                      "privacy": budget_report(self.tc.privacy, new_state["privacy"])}
         return new_state, history
 
     def to_canonical(self, state):
@@ -384,6 +416,7 @@ class ProtocolEngine:
             "server": state["server"],
             "opt": state["opt"],
             "step": jnp.asarray(state["step"], jnp.int32),
+            "privacy": state["privacy"],
         }
 
     def from_canonical(self, canonical):
@@ -392,6 +425,7 @@ class ProtocolEngine:
             "server": canonical["server"],
             "opt": canonical["opt"],
             "step": int(canonical["step"]),
+            "privacy": canonical["privacy"],
         }
 
 
@@ -419,19 +453,24 @@ class FedAvgEngine:
             )
         self.adapter, self.tc, self.opt = adapter, tc, opt
         self.local_batch = local_batch
+        self.guard = PrivacyGuard.from_config(tc.privacy)
         self._local_sgd = fedavg_mod.make_local_sgd(adapter, tc, opt)
 
     def init(self, key):
         self._seed = _seed_from_key(key)
         self._rng = np.random.default_rng(self._seed)
-        return {"params": self.adapter.init(key), "round": 0}
+        self._root_key = key
+        return {"params": self.adapter.init(key), "round": 0,
+                "privacy": budget_init()}
 
     def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
         assert len(shards) == self.tc.n_clients
         wrapped = None
         if eval_fn is not None:
             def wrapped(gp):
-                return eval_fn(self.to_canonical({"params": gp, "round": 0}))
+                return eval_fn(self.to_canonical(
+                    {"params": gp, "round": 0, "privacy": state["privacy"]}
+                ))
         round_offset = int(state["round"])
         # round 0 keeps exact legacy train_fedavg sampling; later offsets
         # (second fit, or restore-then-fit) reseed from (seed, round) so a
@@ -443,12 +482,17 @@ class FedAvgEngine:
             rounds=epochs, local_steps=steps_per_epoch,
             local_batch=self.local_batch, rng=rng,
             round_offset=round_offset, local_sgd=self._local_sgd,
-            eval_fn=wrapped,
+            eval_fn=wrapped, noise_key=self._root_key,
         )
         for i, rec in enumerate(history):
             rec.setdefault("epoch", i)
             rec.setdefault("loss", rec["mean_local_loss"])
-        return {"params": params, "round": int(state["round"]) + epochs}, history
+        # one guard application per local step per client
+        privacy = (budget_advance(state["privacy"], self.tc.privacy,
+                                  epochs * steps_per_epoch)
+                   if self.guard.enabled else state["privacy"])
+        return {"params": params, "round": int(state["round"]) + epochs,
+                "privacy": privacy}, history
 
     def to_canonical(self, state):
         client = state["params"]["client"]
@@ -461,6 +505,7 @@ class FedAvgEngine:
             "server": state["params"]["server"],
             "opt": {},  # FedAvg re-inits client optimizers every round
             "step": jnp.asarray(state["round"], jnp.int32),
+            "privacy": state["privacy"],
         }
 
     def from_canonical(self, canonical):
@@ -468,6 +513,7 @@ class FedAvgEngine:
         return {
             "params": {"client": client, "server": canonical["server"]},
             "round": int(canonical["step"]),
+            "privacy": canonical["privacy"],
         }
 
 
@@ -502,6 +548,7 @@ class SplitSession:
             )
         self.engine: Engine = engine
         self.seed = seed
+        self.guard = PrivacyGuard.from_config(config.privacy)
         self._native = self.engine.init(jax.random.PRNGKey(seed))
         self.history: List[Dict[str, float]] = []
 
@@ -533,19 +580,56 @@ class SplitSession:
 
     def evaluate(self, x, y, *, batch: int = 512) -> Dict[str, Any]:
         """Per-client evaluation: one full pass per client bank plus the
-        share-weighted mean of every metric (top-level keys). See
-        ``trainer.evaluate_per_client``."""
-        return evaluate_per_client(
+        share-weighted mean of every metric (top-level keys) and the
+        accountant's budget under ``"privacy"``. See
+        ``trainer.evaluate_per_client``. (Eval forwards run noise-free —
+        the guard protects RELEASES during training, not local scoring.)"""
+        result = evaluate_per_client(
             self.adapter, self.state, x, y, batch=batch,
             weights=np.asarray(client_weights(self.config)),
             identical_banks=getattr(self.engine, "identical_banks", False),
+        )
+        result["privacy"] = self.privacy_report()
+        return result
+
+    def privacy_report(self, delta_prime: float = 1e-6) -> Dict[str, Any]:
+        """The (ε, δ) budget spent so far: the carried release count plus
+        basic and advanced composition bounds (``repro.privacy.accountant``).
+        Matches ``composed_epsilon(config.privacy, releases)`` exactly —
+        including after a ``save``/``restore`` round-trip, because the
+        counters live inside the canonical state."""
+        return budget_report(
+            self.config.privacy, jax.device_get(self.state["privacy"]),
+            delta_prime,
+        )
+
+    def audit_privacy(self, x_sample, *, sigmas: Sequence[float] = (0.0, 0.1, 1.0),
+                      steps: int = 120, seed: int = 0, client: int = 0,
+                      ) -> List[Dict[str, float]]:
+        """Inversion-attack audit of client ``client``'s trained privacy
+        layer (works for the CNN case studies and the cholesterol MLP alike):
+        for each guard σ the attack reconstructs ``x_sample`` from the
+        released features and reports MSE/PSNR/NCC — reconstruction MSE
+        should RISE with σ. Uses the session's configured feature clip
+        (``config.privacy.clip_norm``) when one is set."""
+        bank = _client_banks_list(self.state["client_banks"])[client]
+
+        def fwd(z):
+            return self.adapter.client_forward(bank, z, None)
+
+        clip = self.config.privacy.clip_norm if self.config.privacy else None
+        return guard_noise_sweep(
+            fwd, jnp.asarray(x_sample), sigmas=sigmas, clip_norm=clip,
+            steps=steps, seed=seed,
         )
 
     def save(self, directory: str, metadata: Optional[dict] = None) -> str:
         """Checkpoint the canonical state via ``checkpoint/io``."""
         state = self.state
         meta = {"engine": self.engine.name, "adapter": self.adapter.name,
-                "n_clients": self.config.n_clients, **(metadata or {})}
+                "n_clients": self.config.n_clients,
+                "privacy_releases": int(state["privacy"]["releases"]),
+                **(metadata or {})}
         epochs_done = getattr(self.engine, "_epochs_done", None)
         if epochs_done is not None:
             meta["epochs_done"] = epochs_done

@@ -19,7 +19,12 @@ The hot path compiles the whole protocol into ONE dispatch per epoch:
     (stop_gradient at the cut); ``e2e`` is classic split learning and
     differentiates through the client banks — including through the
     Pallas privacy kernel when ``CNNConfig.use_kernel`` is set (its
-    ``jax.custom_vjp`` backs onto the XLA reference).
+    ``jax.custom_vjp`` backs onto the XLA reference),
+  * ``SplitTrainConfig.privacy`` builds ONE ``repro.privacy.PrivacyGuard``
+    that releases (clip → Gaussian mechanism → quantize) at the cut inside
+    the vmapped client forward, on fold-in per-step keys shared with the
+    looped reference — and the (ε, δ) budget leaves advance on device
+    inside the canonical state (``repro.privacy.accountant``).
 
 ``make_looped_step`` preserves the seed per-client Python-loop
 implementation as the numerical reference; the parity tests and
@@ -49,6 +54,8 @@ from repro.core.adapters import (
     per_client_metrics,
 )
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.privacy.accountant import budget_advance, budget_init
+from repro.privacy.guard import DPConfig, PrivacyGuard
 
 
 # Mesh axis name the canonical state's leading client dimension shards over
@@ -62,8 +69,48 @@ class SplitTrainConfig:
     data_shares: Tuple[float, ...] = (0.7, 0.2, 0.1)
     server_batch: int = 64
     mode: str = "detached"  # detached (paper) | e2e (classic split learning)
+    # The privacy knob: a repro.privacy.DPConfig builds the PrivacyGuard
+    # every engine applies at the cut (None = guard off, bit-exact with the
+    # unguarded engines).
+    privacy: Optional[DPConfig] = None
+    # Gradient global-norm clip for the server/trainable update (this was
+    # historically named ``clip_norm``, which collided with the DP feature
+    # clip — see the deprecated fields below).
+    grad_clip: float = 1.0
+    # DEPRECATED: both map onto the new fields in __post_init__ with a
+    # DeprecationWarning. ``privacy_noise`` becomes an unclipped guard
+    # (DPConfig(clip_norm=None, noise_scale=...)) reproducing the legacy
+    # Gaussian perturbation bit-exactly; ``clip_norm`` was ALWAYS the
+    # gradient clip and becomes ``grad_clip``.
     privacy_noise: float = 0.0
-    clip_norm: float = 1.0
+    clip_norm: Optional[float] = None
+
+    def __post_init__(self):
+        # the deprecated fields are consumed (mapped onto the new fields,
+        # then cleared) so a later dataclasses.replace() cannot silently
+        # re-apply them over explicitly-set new-field values
+        if self.clip_norm is not None:
+            warnings.warn(
+                "SplitTrainConfig.clip_norm is deprecated (it is the GRADIENT "
+                "clip); use grad_clip=",
+                DeprecationWarning, stacklevel=3,
+            )
+            object.__setattr__(self, "grad_clip", float(self.clip_norm))
+            object.__setattr__(self, "clip_norm", None)
+        if self.privacy_noise != 0.0:
+            warnings.warn(
+                "SplitTrainConfig.privacy_noise is deprecated; use "
+                "privacy=DPConfig(clip_norm=None, noise_scale=...) — the "
+                "guard reproduces the legacy perturbation bit-exactly when "
+                "clipping is disabled",
+                DeprecationWarning, stacklevel=3,
+            )
+            if self.privacy is None:
+                object.__setattr__(
+                    self, "privacy",
+                    DPConfig(clip_norm=None, noise_scale=float(self.privacy_noise)),
+                )
+            object.__setattr__(self, "privacy_noise", 0.0)
 
 
 def client_batch_sizes(tc: SplitTrainConfig) -> List[int]:
@@ -134,14 +181,24 @@ def _make_fused(
     """Shared core of the fused engine: (init_state, unjitted step_core)."""
     detached = tc.mode == "detached"
     weights = client_weights(tc)
-    fwd_banked = banked_client_forward(adapter)
+    # the PrivacyGuard releases at the cut INSIDE the vmapped client forward
+    # (identity when tc.privacy is None — no trace-time overhead). Two
+    # equivalent release paths: keyed (draws noise in-step — the stepwise
+    # engines) and pre-drawn (the scan runner hoists the epoch's threefry
+    # out of the serial loop body and feeds per-step noise slices).
+    guard = PrivacyGuard.from_config(tc.privacy)
+    fwd_guarded = banked_client_forward(adapter, guard=guard)
+    fwd_plain = banked_client_forward(adapter) if guard.enabled else None
     if mesh is not None:
         assert client_axis in mesh.axis_names, (client_axis, mesh.axis_names)
         assert tc.n_clients % mesh.shape[client_axis] == 0, (
             f"n_clients={tc.n_clients} must divide over "
             f"mesh axis {client_axis}={mesh.shape[client_axis]}"
         )
-        fwd_banked = _shard_banked_forward(fwd_banked, mesh, client_axis)
+        fwd_guarded = _shard_banked_forward(fwd_guarded, mesh, client_axis)
+        if fwd_plain is not None:
+            fwd_plain = _shard_banked_forward(fwd_plain, mesh, client_axis)
+    release_noise = jax.vmap(guard.release_with_noise) if guard.enabled else None
     loss_banked = per_client_loss(adapter)
     metrics_banked = per_client_metrics(adapter)
 
@@ -161,10 +218,16 @@ def _make_fused(
             "server": server_params,
             "opt": opt.init(ravel_pytree(trainable)[0]),
             "step": jnp.zeros((), jnp.int32),
+            "privacy": budget_init(),
         }
 
-    def loss_from(client_banks, server_params, xs, ys, noise_keys):
-        feats = fwd_banked(client_banks, xs, noise_keys)  # [C, b, ...]
+    def loss_from(client_banks, server_params, xs, ys, noise_keys,
+                  guard_noise=None):
+        if guard_noise is not None:  # scan path: pre-drawn release noise
+            feats = fwd_plain(client_banks, xs, noise_keys)
+            feats = release_noise(feats, guard_noise)
+        else:  # keyed path (stepwise / guard-off; the draw happens in-step)
+            feats = fwd_guarded(client_banks, xs, noise_keys)  # [C, b, ...]
         if detached:
             feats = jax.lax.stop_gradient(feats)
         c, b = feats.shape[0], feats.shape[1]
@@ -178,14 +241,18 @@ def _make_fused(
         return state["server"] if detached else (state["client_banks"], state["server"])
 
     def with_trainable(state, trainable, new_opt):
+        # one optimizer step = one guarded release per client: the (ε, δ)
+        # budget leaves advance on device, in the same donated state pytree
+        priv = budget_advance(state["privacy"], tc.privacy)
         if detached:
             return {**state, "server": trainable, "opt": new_opt,
-                    "step": state["step"] + 1}
+                    "step": state["step"] + 1, "privacy": priv}
         cb, sp = trainable
         return {**state, "client_banks": cb, "server": sp, "opt": new_opt,
-                "step": state["step"] + 1}
+                "step": state["step"] + 1, "privacy": priv}
 
-    def step_flat(flat, opt_state, step, banks, unravel, xs, ys, rng):
+    def step_flat(flat, opt_state, step, banks, unravel, xs, ys, rng,
+                  guard_noise=None):
         """One fused step entirely in the FLAT parameter domain: the model
         unravels the single trainable buffer (slices fuse into the forward),
         the gradient comes back flat, and clip+update are a handful of
@@ -194,15 +261,16 @@ def _make_fused(
 
         def lf(fl):
             if detached:
-                return loss_from(banks, unravel(fl), xs, ys, noise_keys)
+                return loss_from(banks, unravel(fl), xs, ys, noise_keys,
+                                 guard_noise)
             cb, sp = unravel(fl)
-            return loss_from(cb, sp, xs, ys, noise_keys)
+            return loss_from(cb, sp, xs, ys, noise_keys, guard_noise)
 
         (loss, (out, ycb)), flat_grads = jax.value_and_grad(lf, has_aux=True)(flat)
         # same math as the seed's leaf-wise clip_by_global_norm + update,
         # fp32-reassociated
         gnorm = jnp.sqrt(jnp.sum(jnp.square(flat_grads)))
-        scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-9))
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
         updates, new_opt = opt.update(flat_grads * scale, opt_state, flat, step)
         # share-weighted per-client means: equals the seed's concat-mix for
         # linear metrics; nonlinear aggregates (rmsle, smape) become
@@ -243,6 +311,7 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
     baseline in ``benchmarks/trainer_perf.py``.
     """
     detached = tc.mode == "detached"
+    guard = PrivacyGuard.from_config(tc.privacy)
 
     def init_state(key):
         k0, *cks = jax.random.split(key, tc.n_clients + 1)
@@ -255,12 +324,17 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
             "server": server_params,
             "opt": opt.init(trainable),
             "step": jnp.zeros((), jnp.int32),
+            "privacy": budget_init(),
         }
 
     def loss_from(client_banks, server_params, batches, noise_keys):
         feats, labels = [], []
         for c, (x_c, y_c) in enumerate(batches):
             f = adapter.client_forward(client_banks[c], x_c, noise_keys[c])
+            if guard.enabled:
+                # same fold-in schedule as the fused engines' vmapped guard,
+                # so looped and fused releases draw identical noise
+                f = guard(guard.key_for(noise_keys[c]), f)
             if detached:
                 f = jax.lax.stop_gradient(f)
             feats.append(f)
@@ -279,7 +353,7 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
                 return loss_from(state["client_banks"], server_params, batches, noise_keys)
 
             (loss, (out, ycat)), grads = jax.value_and_grad(lf, has_aux=True)(state["server"])
-            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
             updates, new_opt = opt.update(grads, state["opt"], state["server"], state["step"])
             new_server = apply_updates(state["server"], updates)
             new_state = {**state, "server": new_server, "opt": new_opt, "step": state["step"] + 1}
@@ -291,7 +365,7 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
 
             trainable = (state["client_banks"], state["server"])
             (loss, (out, ycat)), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
-            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
             updates, new_opt = opt.update(grads, state["opt"], trainable, state["step"])
             new_cb, new_server = apply_updates(trainable, updates)
             new_state = {
@@ -301,6 +375,7 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
                 "opt": new_opt,
                 "step": state["step"] + 1,
             }
+        new_state["privacy"] = budget_advance(state["privacy"], tc.privacy)
         metrics = adapter.metrics(out, ycat)
         metrics["grad_norm"] = gnorm
         return new_state, metrics
@@ -387,6 +462,7 @@ def make_epoch_runner(
     init_state, step_core, trainable_of, with_trainable, step_flat = _make_fused(
         adapter, tc, opt, mesh=mesh
     )
+    guard = PrivacyGuard.from_config(tc.privacy)
     take = jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0))
     sample_plan = make_sample_plan(tc, steps_per_epoch)
 
@@ -396,21 +472,52 @@ def make_epoch_runner(
         flat, unravel = ravel_pytree(trainable_of(state))
         banks = state["client_banks"]  # scan-invariant in detached mode
 
+        xs_extra = ()
+        if guard.enabled and guard.sigma > 0.0:
+            # Hoist the epoch's release draws out of the serial scan body:
+            # XLA:CPU runs loop bodies single-threaded, where threefry is
+            # the guard's dominant cost (~4x the batched draw). Same
+            # per-(step, client) keys the in-body release would fold, so
+            # scan and stepwise releases stay bit-identical.
+            bank0 = jax.tree.map(lambda a: a[0], banks)
+            x0 = take(data_x, idx[0])[0]
+            feat = jax.eval_shape(adapter.client_forward, bank0, x0, step_keys[0])
+            epoch_elems = (steps_per_epoch * tc.n_clients
+                           * int(np.prod(feat.shape)))
+            # cap the hoisted buffer at 64MB fp32 (the keyed in-body path
+            # below is bit-identical, just slower per step) — mirrors the
+            # _auto_epoch_mode size guard
+            if epoch_elems <= (1 << 24):
+
+                def step_noise(key):
+                    cks = jax.random.split(key, tc.n_clients)
+                    gks = jax.vmap(guard.key_for)(cks)
+                    return jax.vmap(
+                        lambda k: jax.random.normal(k, feat.shape, jnp.float32)
+                    )(gks)
+
+                xs_extra = (jax.vmap(step_noise)(step_keys),)  # [T, C, b, ...]
+
         def body(carry, inp):
             fl, opt_state, step = carry
-            idx_t, key_t = inp
+            idx_t, key_t, *noise_t = inp
             fl, opt_state, metrics = step_flat(
                 fl, opt_state, step, banks, unravel,
-                take(data_x, idx_t), take(data_y, idx_t), key_t,
+                take(data_x, idx_t), take(data_y, idx_t), key_t, *noise_t,
             )
             return (fl, opt_state, step + 1), metrics
 
         (flat, opt_state, step), ms = jax.lax.scan(
-            body, (flat, state["opt"], state["step"]), (idx, step_keys),
+            body, (flat, state["opt"], state["step"]), (idx, step_keys) + xs_extra,
             unroll=min(unroll, steps_per_epoch),
         )
         new_state = with_trainable(state, unravel(flat), opt_state)
         new_state["step"] = step
+        # the budget leaves stay OUT of the scan carry (they are a pure
+        # function of the step count); advance once for the whole epoch
+        new_state["privacy"] = budget_advance(
+            state["privacy"], tc.privacy, steps_per_epoch
+        )
         return new_state, ms
 
     @partial(jax.jit, donate_argnums=(0,))

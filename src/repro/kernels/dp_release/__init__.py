@@ -1,0 +1,1 @@
+from repro.kernels.dp_release.ops import dp_release

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused DP release kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dp_release_ref(x, noise, *, clip_norm: float, sigma: float = 0.0):
+    """Per-sample L2 clip to ``clip_norm`` + ``sigma``-scaled Gaussian noise.
+
+    x: [B, ...] (leading dim = samples); noise: same shape, standard-normal
+    draws (``None``/ignored when sigma == 0). Compute in fp32, cast back to
+    x.dtype. The norm is an axis reduction (NOT a reshape to [B, F]): on
+    XLA:CPU a reshape here materializes the feature map and breaks fusion
+    with the producing conv's epilogue, which costs more than the clip
+    itself inside a serial scan body. ``rsqrt(max(n², ε²))`` matches the
+    classic ``min(1, c/max(‖x‖, ε))`` guard to fp32 ulp.
+    """
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim))
+    n2 = jnp.sum(xf * xf, axis=axes, keepdims=True)
+    scale = jnp.minimum(1.0, clip_norm * jax.lax.rsqrt(jnp.maximum(n2, 1e-24)))
+    out = xf * scale
+    if sigma > 0.0 and noise is not None:
+        out = out + sigma * noise.astype(jnp.float32)
+    return out.astype(x.dtype)

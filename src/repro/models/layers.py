@@ -21,13 +21,16 @@ def embed_init(key, shape, dtype=jnp.float32):
 # ---------------------------------------------------------------- privacy
 def add_privacy_noise(x, scale: float, key):
     """The paper's §III-A Gaussian feature perturbation, shared by the CNN
-    and MLP privacy-preserving layers. The fused Pallas kernel
+    and MLP privacy-preserving layers. Thin wrapper over
+    ``repro.privacy.guard.gaussian_release`` — the same draw the
+    ``PrivacyGuard``'s unclipped path makes, so model-level noise and the
+    guard at the cut share one formula. The fused Pallas kernel
     (``repro.kernels.privacy_conv``) draws the SAME noise (same key, same
     post-pool shape) on-chip, so kernel and XLA paths match bit-for-bit in
     distribution."""
-    if scale <= 0.0 or key is None:
-        return x
-    return x + scale * jax.random.normal(key, x.shape, x.dtype)
+    from repro.privacy.guard import gaussian_release
+
+    return gaussian_release(x, scale, key)
 
 
 # ------------------------------------------------------------------- norms

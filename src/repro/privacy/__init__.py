@@ -1,0 +1,52 @@
+"""First-class privacy subsystem for the split cut.
+
+- guard:      ``PrivacyGuard`` (clip → Gaussian mechanism → quantize) built
+              from ``DPConfig``; the ONE release policy every engine applies
+- accountant: release-count + (ε, δ) composition as int32/float32 leaves in
+              the canonical ``SplitSession`` state (survives save/restore)
+- audit:      inversion-attack privacy metric + guard noise sweeps
+              (``SplitSession.audit_privacy``)
+
+The fused clip+noise Pallas kernel lives in ``repro.kernels.dp_release``.
+``repro.core.dp`` and ``repro.core.inversion`` are deprecated shims over
+this package.
+"""
+from repro.privacy.accountant import (
+    budget_advance,
+    budget_init,
+    budget_report,
+    composed_epsilon,
+)
+from repro.privacy.audit import (
+    guard_noise_sweep,
+    inversion_attack_report,
+    invert_features,
+    privacy_metrics,
+)
+from repro.privacy.guard import (
+    DPConfig,
+    GUARD_KEY_FOLD,
+    PrivacyGuard,
+    clip_per_sample,
+    dp_release,
+    gaussian_release,
+    quantize_ste,
+)
+
+__all__ = [
+    "DPConfig",
+    "GUARD_KEY_FOLD",
+    "PrivacyGuard",
+    "budget_advance",
+    "budget_init",
+    "budget_report",
+    "clip_per_sample",
+    "composed_epsilon",
+    "dp_release",
+    "gaussian_release",
+    "guard_noise_sweep",
+    "inversion_attack_report",
+    "invert_features",
+    "privacy_metrics",
+    "quantize_ste",
+]

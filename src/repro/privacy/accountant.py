@@ -1,0 +1,93 @@
+"""(ε, δ) budget accounting carried INSIDE the canonical session state.
+
+The budget is a tiny pytree of int32/float32 leaves that rides along in
+``SplitSession``'s canonical state next to the parameters::
+
+    {"releases": int32 (), "epsilon_basic": float32 ()}
+
+``releases`` counts guard applications PER CLIENT (fused/looped engines:
+one per optimizer step; protocol-async: the worst-case client's queue
+pushes; FedAvg: local steps — the guard runs at the cut inside local
+training even though features stay on-device, keeping utility comparable).
+``epsilon_basic`` accumulates the linear-composition spend on device.
+
+Because the leaves live in the state pytree, the budget survives
+``save``/``restore`` round-trips and is donated/carried through the fused
+scan like any other leaf. The tighter advanced-composition bound (Dwork &
+Roth Thm 3.20) is derived from the release count at report time —
+composition bounds are not additive, so only the count is carried.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.privacy.guard import DPConfig
+
+Budget = Dict[str, jnp.ndarray]
+
+
+def budget_init() -> Budget:
+    return {
+        "releases": jnp.zeros((), jnp.int32),
+        "epsilon_basic": jnp.zeros((), jnp.float32),
+    }
+
+
+def budget_advance(budget: Budget, dp: Optional[DPConfig], releases: int = 1) -> Budget:
+    """Account ``releases`` more guard applications. Identity when the guard
+    is disabled (``dp is None``). Pure jnp — safe inside jit/scan."""
+    if dp is None:
+        return budget
+    eps = dp.release_epsilon
+    return {
+        "releases": budget["releases"] + jnp.int32(releases),
+        "epsilon_basic": budget["epsilon_basic"]
+        + jnp.float32(eps) * jnp.float32(releases),
+    }
+
+
+def composed_epsilon(dp: DPConfig, releases: int, delta_prime: float = 1e-6) -> dict:
+    """Privacy spent after ``releases`` pushes from one client.
+
+    Returns both the basic (linear) bound and the advanced-composition bound
+    (Dwork & Roth Thm 3.20): eps' = eps*sqrt(2T ln(1/δ')) + T eps(e^eps - 1).
+    """
+    t = releases
+    eps = dp.release_epsilon
+    if not math.isfinite(eps):  # unclipped release: no finite DP guarantee
+        basic = adv = math.inf if t > 0 else 0.0
+    else:
+        basic = t * eps
+        # e^eps overflows float64 past ~709; the bound is astronomically
+        # meaningless there anyway
+        growth = math.exp(eps) - 1 if eps < 700 else math.inf
+        adv = eps * math.sqrt(2 * t * math.log(1 / delta_prime)) + t * eps * growth
+        if t == 0:
+            adv = 0.0
+    return {
+        "basic_epsilon": basic,
+        "advanced_epsilon": adv,
+        "delta": t * dp.delta + delta_prime,
+        "releases": t,
+    }
+
+
+def budget_report(dp: Optional[DPConfig], budget: Budget,
+                  delta_prime: float = 1e-6) -> dict:
+    """Human-readable budget: the carried counters + both composition bounds.
+    ``advanced_epsilon`` ≤ ``basic_epsilon`` for small per-release ε and
+    large release counts; report the min as ``spent_epsilon``."""
+    t = int(budget["releases"])
+    rep: dict = {
+        "enabled": dp is not None,
+        "releases": t,
+        "sigma": dp.sigma if dp is not None else 0.0,
+    }
+    if dp is not None:
+        rep.update(composed_epsilon(dp, t, delta_prime))
+        rep["epsilon_basic_carried"] = float(budget["epsilon_basic"])
+        rep["spent_epsilon"] = min(rep["basic_epsilon"], rep["advanced_epsilon"])
+    return rep

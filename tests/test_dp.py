@@ -1,5 +1,6 @@
 """Differentially-private feature release (beyond-paper: the paper's §V
-future-work item) + non-IID client splits."""
+future-work item) + non-IID client splits. The mechanism now lives in
+``repro.privacy`` (``repro.core.dp`` is a deprecation shim over it)."""
 import math
 
 import jax
@@ -10,7 +11,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dp import DPConfig, clip_per_sample, composed_epsilon, dp_release
+from repro.privacy import DPConfig, clip_per_sample, composed_epsilon, dp_release
 from repro.data.split import split_clients
 
 SETTINGS = settings(max_examples=20, deadline=None)

@@ -103,7 +103,7 @@ def test_fedavg_converges_through_session(chol_shards):
 
 def test_canonical_state_uniform_across_engines(chol_shards):
     """Every engine exposes the SAME canonical surface: stacked banks,
-    server, opt, int32 step."""
+    server, opt, int32 step, and the privacy accountant's budget leaves."""
     shards, _ = chol_shards
     ad = mlp_adapter(CHOLESTEROL_MLP)
     for engine, kw in [("fused-scan", {}), ("looped-ref", {}),
@@ -111,9 +111,11 @@ def test_canonical_state_uniform_across_engines(chol_shards):
         session = SplitSession(ad, WEIGHTED, adamw(1e-2), engine=engine, **kw)
         session.fit(shards, epochs=1, steps_per_epoch=2)
         st = session.state
-        assert set(st) == {"client_banks", "server", "opt", "step"}, engine
+        assert set(st) == {"client_banks", "server", "opt", "step", "privacy"}, engine
         assert jax.tree.leaves(st["client_banks"])[0].shape[0] == 3, engine
         assert st["step"].dtype == jnp.int32, engine
+        assert st["privacy"]["releases"].dtype == jnp.int32, engine
+        assert int(st["privacy"]["releases"]) == 0, engine  # guard off here
 
 
 # ------------------------------------------------------------- mesh sharding
