@@ -2,8 +2,9 @@
 
 - session:    ONE `SplitSession` surface over every execution regime
               (fused-scan / fused-stepwise / looped-ref / protocol-async /
-              fedavg), with mesh sharding of the client axis
-- queue:      the server-side feature/parameter queue (paper Fig. 1)
+              fused-queue / fedavg), with mesh sharding of the client axis
+- queue:      the server-side feature/parameter queue (paper Fig. 1) and the
+              FeatureBank that stages arrivals for the fused-queue engine
 - protocol:   explicit two-program client/server simulation (protocol fidelity)
 - trainer:    fused SPMD multi-client trainers for the paper's CNN/MLP models
 - distributed: multi-client split learning over the assigned LLM architectures
@@ -13,7 +14,7 @@ The privacy subsystem (PrivacyGuard at the cut, (ε, δ) accountant, the
 inversion audit) lives in ``repro.privacy``; ``core.dp`` and
 ``core.inversion`` are deprecated shims over it.
 """
-from repro.core.queue import FeatureQueue
+from repro.core.queue import FeatureBank, FeatureQueue
 from repro.privacy.guard import DPConfig, PrivacyGuard
 from repro.core.trainer import (
     CLIENT_AXIS,

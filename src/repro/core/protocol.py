@@ -9,6 +9,19 @@ trust boundary. Used by protocol-fidelity tests and the privacy benchmarks:
     maps enter the queue;
   * the server never touches client parameters;
   * clients run asynchronously (threaded) with rates ∝ their data volume.
+
+Role in the engine registry (``repro.core.session``): this module is the
+client/arrival half of BOTH queue-fed engines. ``protocol-async`` pairs the
+:class:`SplitClient` fleet with :class:`SplitServer` (one trunk update per
+queue pop); ``fused-queue`` pairs the SAME clients and the SAME
+:func:`drive_protocol` arrival order with a :class:`BankedConsumer`, which
+accumulates pops into a ``core.queue.FeatureBank`` for one scanned server
+dispatch per epoch (``core.trainer.make_server_bank_runner``). Canonical
+state leaves owned here: ``client_banks`` live inside the ``SplitClient``
+objects (one bank per hospital, never crossing the trust boundary) and
+``server``/``opt``/``step`` inside ``SplitServer`` — the engines assemble
+the canonical pytree from those after each epoch; the ``privacy`` budget
+leaf is advanced by the engines from ``SplitClient.releases``.
 """
 from __future__ import annotations
 
@@ -27,6 +40,21 @@ from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.privacy.guard import PrivacyGuard
 
 
+def make_client_release_fwd(adapter: SplitAdapter,
+                            guard: Optional[PrivacyGuard] = None):
+    """The jitted client-side release: ``(params, x, key) -> features``,
+    guarded at the cut when the ``PrivacyGuard`` is enabled. Parameters are
+    arguments, so ONE compiled function serves every client of a fleet —
+    the engines prebuild it and hand it to each ``SplitClient`` instead of
+    paying a fresh trace per client per ``fit``."""
+    guard = guard if guard is not None else PrivacyGuard()
+    if guard.enabled:
+        return jax.jit(
+            lambda p, x, k: guard(guard.key_for(k), adapter.client_forward(p, x, k))
+        )
+    return jax.jit(lambda p, x, k: adapter.client_forward(p, x, k))
+
+
 class SplitClient:
     """A hospital: private data + the privacy-preserving layer ONLY.
 
@@ -40,28 +68,29 @@ class SplitClient:
     keys AND the batch-index sequence differ from the pre-guard protocol.
     ``releases`` counts every batch that left the privacy layer (whether or
     not the queue accepted it) for the (ε, δ) accountant.
+
+    ``as_numpy=False`` keeps the released features on device (values
+    identical — ``np.asarray`` is a copy, not a rounding): the fused-queue
+    engine banks device arrays and pays ONE host<->device boundary per
+    epoch instead of one round-trip per push.
     """
 
     def __init__(self, client_id: int, adapter: SplitAdapter, client_params,
                  data: Tuple[np.ndarray, np.ndarray], batch: int,
                  noise_seed: int = 0, *, noise_key=None,
-                 guard: Optional[PrivacyGuard] = None):
+                 guard: Optional[PrivacyGuard] = None, fwd=None,
+                 as_numpy: bool = True):
         self.client_id = client_id
         self.adapter = adapter
         self.params = client_params  # never leaves this object
         self.x, self.y = data
         self.batch = batch
         self.releases = 0
+        self._as_numpy = as_numpy
         self._rng = np.random.default_rng(noise_seed + client_id)  # batch sampling
         self._key = (noise_key if noise_key is not None
                      else jax.random.PRNGKey(noise_seed + client_id))
-        guard = guard if guard is not None else PrivacyGuard()
-        if guard.enabled:
-            self._fwd = jax.jit(
-                lambda p, x, k: guard(guard.key_for(k), adapter.client_forward(p, x, k))
-            )
-        else:
-            self._fwd = jax.jit(lambda p, x, k: adapter.client_forward(p, x, k))
+        self._fwd = fwd if fwd is not None else make_client_release_fwd(adapter, guard)
 
     def produce(self):
         """One queue item: (released feature map, labels). Raw x never returned."""
@@ -70,7 +99,7 @@ class SplitClient:
         self.releases += 1
         key = jax.random.fold_in(self._key, self.releases)
         features = self._fwd(self.params, xb, key)
-        return np.asarray(features), self.y[idx]
+        return (np.asarray(features) if self._as_numpy else features), self.y[idx]
 
 
 class SplitServer:
@@ -117,20 +146,57 @@ class SplitServer:
         return loss
 
 
+class BankedConsumer:
+    """The fused-queue engine's stand-in for ``SplitServer`` inside
+    :func:`drive_protocol`: same ``step_count`` / ``train_one`` surface, but
+    each pop is ACCEPTED into a ``core.queue.FeatureBank`` (preserving the
+    queue's release order) instead of stepping the trunk. The actual trunk
+    updates happen afterwards as one ``lax.scan`` over the stacked bank
+    (``core.trainer.make_server_bank_runner``) — so with the same clients,
+    shares and drive mode, the items consumed (and therefore the σ=0 math)
+    are identical to ``protocol-async``'s, just batched into one dispatch."""
+
+    def __init__(self, queue: FeatureQueue, step_count: int = 0):
+        self.queue = queue
+        self.step_count = step_count
+        self.bank = None  # the engine installs a fresh FeatureBank per epoch
+
+    def train_one(self, timeout: float = 1.0) -> Optional[float]:
+        if self.bank is None or self.bank.full:
+            return None  # nowhere to put an item: leave it queued
+        item = self.queue.pop(timeout=timeout)
+        if item is None:
+            return None
+        self.bank.accept(*item)
+        self.step_count += 1
+        return None  # no loss yet — it materializes in the scanned epoch
+
+
 def drive_protocol(
     clients: Sequence[SplitClient],
-    server: SplitServer,
+    server,
     queue: FeatureQueue,
     shares: Sequence[float],
     total_server_steps: int,
     *,
     threaded: bool = True,
-) -> int:
-    """Drive prebuilt clients + server until ``server.step_count`` reaches
-    ``total_server_steps`` (an ABSOLUTE target, so repeated calls resume).
-    Returns the number of produced batches dropped without ever being
-    enqueued (0 unless the run stops while the queue is full)."""
-    dropped = 0
+) -> Dict[str, int]:
+    """Drive prebuilt clients + a consumer until ``server.step_count``
+    reaches ``total_server_steps`` (an ABSOLUTE target, so repeated calls
+    resume). ``server`` is anything with the ``step_count`` /
+    ``train_one(timeout)`` surface: a ``SplitServer`` (protocol-async) or a
+    :class:`BankedConsumer` (fused-queue) — both engines share this exact
+    arrival order, which is what makes their σ=0 runs bit-identical.
+
+    Returns accounting for the engines' ``queue_stats``:
+      * ``dropped`` — produced batches never enqueued (0 unless the run
+        stops while the queue is full);
+      * ``drained`` — consumptions forced by a FULL queue between pushes
+        (the PR 2 round-robin fix: a full queue drains the consumer instead
+        of silently dropping the batch; always 0 in threaded mode, where
+        the consumer pops continuously).
+    """
+    dropped = drained = 0
     if threaded:
         stop = threading.Event()
 
@@ -161,19 +227,20 @@ def drive_protocol(
                     break
                 for _ in range(int(q)):
                     f, l = c.produce()
-                    # a full queue DRAINS the server instead of dropping the
-                    # batch (the seed ignored push()'s return value here, so
-                    # rejected items silently vanished)
+                    # a full queue DRAINS the consumer instead of dropping
+                    # the batch (the seed ignored push()'s return value here,
+                    # so rejected items silently vanished)
                     pushed = queue.push(c.client_id, f, l)
                     while not pushed and server.step_count < total_server_steps:
                         server.train_one(timeout=0.0)
+                        drained += 1
                         pushed = queue.push(c.client_id, f, l)
                     if not pushed:  # target reached with the queue still full
                         dropped += 1
                         break
             while len(queue) and server.step_count < total_server_steps:
                 server.train_one(timeout=0.0)
-    return dropped
+    return {"dropped": dropped, "drained": drained}
 
 
 def run_protocol(

@@ -5,12 +5,25 @@ without ever blocking an incoming client ("the server does not stop processing
 for incoming client data"). The queue also lets the server *control the amount
 of input data from different clients* — per-client rate caps implement the
 paper's imbalance handling.
+
+Role in the engine registry (``repro.core.session``): this module is the
+transport layer of both queue-fed engines — ``protocol-async`` pops one item
+per trunk update, ``fused-queue`` drains arrivals into a :class:`FeatureBank`
+(padded slots + validity mask) that feeds ONE scanned server dispatch per
+epoch (``repro.core.trainer.make_server_bank_runner``). It owns NO canonical
+state leaves: everything in here is transient transport; parameters,
+optimizer moments, the step counter and the privacy budget stay with the
+engines. Accounting (``stats()``: pushed/popped/rejected, plus the drive
+loop's dropped/drained counts surfaced through the engines' ``queue_stats``)
+is the audit trail for the paper's imbalance claims.
 """
 from __future__ import annotations
 
 import collections
 import threading
 from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 
 class FeatureQueue:
@@ -70,3 +83,64 @@ class FeatureQueue:
 
     def stats(self) -> Dict[str, int]:
         return {"pushed": self.pushed, "popped": self.popped, "rejected": self.rejected}
+
+
+class FeatureBank:
+    """Fixed-capacity accumulator of popped queue items: the bridge between
+    the queue's wall-clock arrival order and the fused scanned server epoch.
+
+    Instead of stepping the trunk once per queue pop (``protocol-async``),
+    the ``fused-queue`` engine accepts up to ``capacity`` arriving
+    (client_id, features, labels) items — in exactly the order the queue
+    released them — and then stacks them into the scanned epoch's device
+    buffers: ``[K, b, ...]`` feature/label slots plus a ``[K]`` validity
+    mask. Unfilled slots are zero-padded and masked invalid; the scan body
+    turns an invalid slot into an identity update, so a partially filled
+    bank (e.g. a final drain of whatever is left in the queue) trains on
+    exactly the items that arrived and nothing else.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity > 0, capacity
+        self.capacity = int(capacity)
+        self._features: List[Any] = []
+        self._labels: List[Any] = []
+
+    def __len__(self) -> int:
+        return len(self._features)
+
+    @property
+    def full(self) -> bool:
+        return len(self._features) >= self.capacity
+
+    def accept(self, client_id, features, labels) -> None:
+        """Bank one popped queue item, preserving the queue's release order.
+        ``client_id`` matches the queue-item layout; per-client provenance
+        stays with the queue's own counters (``FeatureQueue.stats``)."""
+        assert not self.full, "FeatureBank over capacity"
+        self._features.append(features)
+        self._labels.append(labels)
+
+    def stacked(self):
+        """-> (features [K, b, ...], labels [K, b, ...], valid [K] bool).
+
+        K = ``capacity``; slots past ``len(self)`` are zero-padded and masked
+        invalid. Features keep their incoming type (device arrays stay on
+        device — the stack is the host->device boundary, one transfer per
+        epoch instead of one per server step).
+        """
+        import jax.numpy as jnp
+
+        assert len(self) > 0, "stacking an empty FeatureBank"
+        n, k = len(self), self.capacity
+        feats = jnp.stack([jnp.asarray(f) for f in self._features])
+        labels = jnp.stack([jnp.asarray(l) for l in self._labels])
+        if n < k:
+            feats = jnp.concatenate(
+                [feats, jnp.zeros((k - n,) + feats.shape[1:], feats.dtype)]
+            )
+            labels = jnp.concatenate(
+                [labels, jnp.zeros((k - n,) + labels.shape[1:], labels.dtype)]
+            )
+        valid = jnp.asarray(np.arange(k) < n)
+        return feats, labels, valid

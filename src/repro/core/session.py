@@ -3,7 +3,9 @@
 The paper's protocol — a privacy-preserving layer at each hospital, the trunk
 at the central server — runs in this repo under several regimes: the fused
 SPMD engine (scan or stepwise epochs), the seed per-client reference loop,
-the wall-clock asynchronous queue protocol, and the FedAvg baseline. Each
+the wall-clock asynchronous queue protocol, the fused-queue bridge (queue
+arrivals replayed through the scanned server path), and the FedAvg baseline.
+Each
 used to be its own entry point with its own state shape; ``SplitSession``
 drives all of them through ONE signature and ONE canonical state pytree, so
 checkpointing, evaluation, DP release and the inversion privacy metric apply
@@ -32,6 +34,15 @@ over a device mesh with ``jax.shard_map`` so each hospital's privacy layer
 runs on its own device; on a single-device host it is a bit-exact no-op
 (asserted by the CPU parity test).
 
+Role in the engine registry: this module IS the registry (the
+``register_engine`` decorator and every built-in engine class — fused
+scan/stepwise/auto, looped-ref, protocol-async, fused-queue, fedavg), plus
+the ``SplitSession`` facade over it. It owns no state leaves itself — each
+engine's ``to_canonical``/``from_canonical`` pair is the lossless contract
+between its native layout and the five canonical leaves above, and the
+session only ever stores the native form, converting on demand. See
+docs/engines.md for the regimes end-to-end.
+
     session = SplitSession(adapter, SplitTrainConfig(...), adamw(1e-3))
     session.fit(shards, epochs=30, steps_per_epoch=10)
     session.evaluate(x_test, y_test)   # per-client + share-weighted mean
@@ -50,7 +61,7 @@ from repro.checkpoint.io import load_checkpoint, save_checkpoint
 from repro.core import fedavg as fedavg_mod
 from repro.core import protocol as protocol_mod
 from repro.core.adapters import SplitAdapter
-from repro.core.queue import FeatureQueue
+from repro.core.queue import FeatureBank, FeatureQueue
 from repro.core.trainer import (
     CLIENT_AXIS,
     SplitTrainConfig,
@@ -63,6 +74,7 @@ from repro.core.trainer import (
     make_epoch_runner,
     make_looped_step,
     make_sample_plan,
+    make_server_bank_runner,
     make_spatio_temporal_step,
     stack_pytrees,
     unstack_pytree,
@@ -310,10 +322,12 @@ class ProtocolEngine:
                  threaded: bool = False, client_batch: Optional[int] = None,
                  queue_size: int = 64, per_client_cap: Optional[int] = None):
         if mesh is not None:
-            raise ValueError("protocol-async does not support mesh=; use a fused engine")
+            raise ValueError(
+                f"{self.name} does not support mesh=; use a fused engine"
+            )
         if tc.mode != "detached":
             raise ValueError(
-                "protocol-async trains the server trunk only (the paper's "
+                f"{self.name} trains the server trunk only (the paper's "
                 "detached regime); mode='e2e' needs a fused or looped engine"
             )
         self.adapter, self.tc, self.opt = adapter, tc, opt
@@ -321,6 +335,10 @@ class ProtocolEngine:
         self.client_batch = client_batch or fused_client_batch(tc)
         self.queue_size, self.per_client_cap = queue_size, per_client_cap
         self.guard = PrivacyGuard.from_config(tc.privacy)
+        # ONE jitted client release shared by the whole fleet across fits
+        # (params are arguments, so per-client/per-fit retraces would only
+        # re-derive the same program)
+        self._client_fwd = protocol_mod.make_client_release_fwd(adapter, self.guard)
         self.losses: List[float] = []
         self.stats: Dict[str, Any] = {}
 
@@ -357,47 +375,76 @@ class ProtocolEngine:
             jax.random.fold_in(self._root_key, int(step)), client_id
         )
 
+    # clients keep host-NumPy releases here (the per-pop server step consumes
+    # them from the host anyway); the fused-queue subclass flips this off
+    _client_as_numpy = True
+
+    def _make_clients(self, state, shards):
+        """The fleet, seeded from the consumed server step so a second fit
+        (or a restore-then-fit) draws fresh batches — shared verbatim by
+        protocol-async and fused-queue, which is half of their σ=0 parity."""
+        return [
+            protocol_mod.SplitClient(
+                c, self.adapter, state["client_banks"][c], shards[c],
+                batch=self.client_batch,
+                noise_seed=self._noise_seed_for(state["step"]),
+                noise_key=self._noise_key_for(state["step"], c),
+                fwd=self._client_fwd, as_numpy=self._client_as_numpy,
+            )
+            for c in range(self.tc.n_clients)
+        ]
+
+    # ---- the two hooks that differ between the per-pop and banked servers
+    def _make_consumer(self, state, queue):
+        """The ``drive_protocol`` consumer for this engine."""
+        return protocol_mod.SplitServer(
+            self.adapter, state["server"], self.opt, queue,
+            clip_norm=self.tc.grad_clip,
+            opt_state=state["opt"], step_count=int(state["step"]),
+        )
+
+    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch):
+        """Drive one epoch through ``drive_protocol`` and return
+        ``(losses, server_params, opt_state, step, drive_stats)``. Every
+        line of bookkeeping AROUND this hook is shared with the fused-queue
+        subclass — keeping the two engines' accounting in lockstep is what
+        the σ=0 bit-parity contract rests on."""
+        d = protocol_mod.drive_protocol(
+            clients, consumer, queue, shares,
+            consumer.step_count + steps_per_epoch, threaded=self.threaded,
+        )
+        return (consumer.losses[-steps_per_epoch:], consumer.params,
+                consumer.opt_state, consumer.step_count, d)
+
     def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
         assert len(shards) == self.tc.n_clients
         shares = np.asarray(self.tc.data_shares, np.float64)
         shares = (shares / shares.sum()).tolist()
         queue = FeatureQueue(max_size=self.queue_size,
                              per_client_cap=self.per_client_cap)
-        clients = [
-            protocol_mod.SplitClient(
-                c, self.adapter, state["client_banks"][c], shards[c],
-                batch=self.client_batch,
-                noise_seed=self._noise_seed_for(state["step"]),
-                noise_key=self._noise_key_for(state["step"], c),
-                guard=self.guard,
-            )
-            for c in range(self.tc.n_clients)
-        ]
-        server = protocol_mod.SplitServer(
-            self.adapter, state["server"], self.opt, queue,
-            clip_norm=self.tc.grad_clip,
-            opt_state=state["opt"], step_count=int(state["step"]),
-        )
-        dropped = 0
+        clients = self._make_clients(state, shards)
+        consumer = self._make_consumer(state, queue)
+        dropped = drained = 0
         history = []
         new_state = state
         for ep in range(epochs):
-            target = server.step_count + steps_per_epoch
-            dropped += protocol_mod.drive_protocol(
-                clients, server, queue, shares, target, threaded=self.threaded
+            losses, server_params, opt_state, step, d = self._consume_epoch(
+                consumer, clients, queue, shares, steps_per_epoch
             )
-            losses = server.losses[-steps_per_epoch:]
+            dropped += d["dropped"]
+            drained += d["drained"]
+            self.losses.extend(losses)
             rec = {"epoch": ep, "loss": float(np.mean(losses)),
-                   "server_steps": server.step_count}
+                   "server_steps": step}
             # per-client budget: the WORST-CASE client's release count this
             # run (every produced batch left the privacy layer, whether or
             # not the queue accepted it)
             released = max(c.releases for c in clients)
             new_state = {
                 "client_banks": [c.params for c in clients],
-                "server": server.params,
-                "opt": server.opt_state,
-                "step": server.step_count,
+                "server": server_params,
+                "opt": opt_state,
+                "step": step,
                 "privacy": budget_advance(state["privacy"], self.tc.privacy, released)
                 if self.guard.enabled else state["privacy"],
             }
@@ -405,8 +452,7 @@ class ProtocolEngine:
                 rec.update({f"val_{k}": v
                             for k, v in eval_fn(self.to_canonical(new_state)).items()})
             history.append(rec)
-        self.losses.extend(server.losses)
-        self.stats = {**queue.stats(), "dropped": dropped,
+        self.stats = {**queue.stats(), "dropped": dropped, "drained": drained,
                       "privacy": budget_report(self.tc.privacy, new_state["privacy"])}
         return new_state, history
 
@@ -427,6 +473,73 @@ class ProtocolEngine:
             "step": int(canonical["step"]),
             "privacy": canonical["privacy"],
         }
+
+
+# ------------------------------------------------------------- fused-queue
+@register_engine("fused-queue")
+class FusedQueueEngine(ProtocolEngine):
+    """The async-queue arrival semantics on the fused throughput path.
+
+    Same client fleet, same ``FeatureQueue``, same ``drive_protocol``
+    arrival order and drop/drain accounting as ``protocol-async`` — but the
+    consumer is a ``BankedConsumer`` that accumulates arriving feature
+    batches into the scanned epoch's stacked device buffers (a
+    ``FeatureBank``: padded ``[K, b, ...]`` slots + validity mask) instead
+    of stepping the trunk once per queue pop. The epoch's trunk updates
+    then run as ONE ``lax.scan`` dispatch (``make_server_bank_runner``)
+    whose per-slot math is op-identical to ``SplitServer._step``, so a σ=0
+    run is bit-exact with ``protocol-async`` while the per-item dispatch
+    and per-push host round-trips disappear. Canonical state, save/restore,
+    ``evaluate()["privacy"]`` and the accountant behave exactly as for the
+    protocol engine (the two engines' checkpoints are interchangeable).
+    ``unroll`` defaults to 1 — unrolling the scan would trade the parity
+    guarantee away (see ``make_server_bank_runner``).
+
+    Memory: one epoch's releases live on device at once —
+    O(steps_per_epoch × client_batch × feature_size), vs protocol-async's
+    O(queue_size) items. Because the step counter (and the clients' RNG
+    base) is absolute, ``steps_per_epoch`` is purely the BANK CHUNK SIZE
+    for this engine: halving it and doubling ``epochs`` replays the exact
+    same item sequence bit-for-bit, so bound memory that way."""
+
+    name = "fused-queue"
+    # device-resident releases: the bank stack is the ONE host<->device
+    # boundary per epoch (protocol-async round-trips every push)
+    _client_as_numpy = False
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None,
+                 threaded: bool = False, client_batch: Optional[int] = None,
+                 queue_size: int = 64, per_client_cap: Optional[int] = None,
+                 unroll: int = 1):
+        super().__init__(adapter, tc, opt, mesh=mesh, threaded=threaded,
+                         client_batch=client_batch, queue_size=queue_size,
+                         per_client_cap=per_client_cap)
+        self._run_bank = make_server_bank_runner(
+            adapter, opt, tc.grad_clip, unroll=unroll
+        )
+
+    def _make_consumer(self, state, queue):
+        self._server_params, self._opt_state = state["server"], state["opt"]
+        return protocol_mod.BankedConsumer(queue, step_count=int(state["step"]))
+
+    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch):
+        """Bank one epoch of arrivals, then replay the bank as one scanned
+        trunk dispatch — everything else (drive order, accounting, state
+        assembly) is inherited from ProtocolEngine, line for line."""
+        step_before = consumer.step_count
+        consumer.bank = bank = FeatureBank(steps_per_epoch)
+        d = protocol_mod.drive_protocol(
+            clients, consumer, queue, shares,
+            step_before + steps_per_epoch, threaded=self.threaded,
+        )
+        self._server_params, self._opt_state, _, losses = self._run_bank(
+            self._server_params, self._opt_state, step_before, *bank.stacked()
+        )
+        losses = np.asarray(jax.device_get(losses))
+        epoch_losses = [float(l) for l in losses[: len(bank)]]  # valid slots
+        return (epoch_losses, self._server_params, self._opt_state,
+                consumer.step_count, d)
 
 
 # ------------------------------------------------------------------- fedavg
@@ -561,6 +674,10 @@ class SplitSession:
         assert len(shards) == self.config.n_clients, (
             f"{len(shards)} shards for n_clients={self.config.n_clients}"
         )
+        if steps_per_epoch < 1:
+            # uniform across engines: a zero-step epoch would diverge per
+            # regime (empty bank vs empty loss slice) instead of failing loud
+            raise ValueError(f"steps_per_epoch must be >= 1, got {steps_per_epoch}")
         self._native, history = self.engine.run(
             self._native, shards, epochs=epochs, steps_per_epoch=steps_per_epoch,
             eval_fn=eval_fn,

@@ -31,7 +31,20 @@ implementation as the numerical reference; the parity tests and
 ``benchmarks/trainer_perf.py`` compare the fused engine against it.
 
 A wall-clock-faithful asynchronous queue simulation lives in
-``repro.core.protocol``; this module is the throughput-oriented equivalent.
+``repro.core.protocol``; this module is the throughput-oriented equivalent —
+and ``make_server_bank_runner`` is the bridge between the two: it replays a
+``FeatureBank`` of queue arrivals (padded slots + validity mask) as ONE
+scanned sequence of server trunk updates, bit-identical to
+``protocol.SplitServer`` stepping once per pop.
+
+Role in the engine registry (``repro.core.session``): this module BUILDS the
+compiled programs behind ``auto`` / ``fused-scan`` / ``fused-stepwise``
+(``make_epoch_runner``), the ``looped-ref`` reference (``make_looped_step``)
+and the server half of ``fused-queue`` (``make_server_bank_runner``). It
+also defines the canonical state's layout authority: the fused init owns ALL
+five leaves — stacked ``client_banks``, ``server``, flat-buffer ``opt``,
+int32 ``step``, and the ``privacy`` budget (advanced here on device via
+``repro.privacy.accountant``).
 """
 from __future__ import annotations
 
@@ -381,6 +394,68 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
         return new_state, metrics
 
     return init_state, step
+
+
+def make_server_bank_runner(adapter: SplitAdapter, opt: Optimizer,
+                            grad_clip: float = 1.0, *, unroll: int = 1):
+    """The fused-queue engine's server half: replay a stacked bank of queue
+    arrivals as ONE ``lax.scan`` of trunk updates.
+
+    Returns ``run_bank(server_params, opt_state, step0, features, labels,
+    valid) -> (server_params, opt_state, step, losses)`` where ``features``
+    is ``[K, b, ...]`` released feature slots in queue order, ``labels`` is
+    ``[K, b, ...]`` and ``valid`` is a ``[K]`` bool mask (zero-padded slots
+    of a partially filled ``core.queue.FeatureBank`` are masked out and
+    become identity updates — params, moments and the step counter all hold
+    still, and the slot's loss is reported as NaN so it can't silently leak
+    into an epoch mean).
+
+    The per-slot math is deliberately the SAME op sequence as
+    ``protocol.SplitServer._step`` — ``value_and_grad`` of the adapter loss,
+    leaf-wise ``clip_by_global_norm``, ``opt.update``, ``apply_updates`` —
+    so a σ=0 fused-queue epoch is bit-identical to protocol-async stepping
+    the same items one pop at a time; the scan only removes the per-item
+    dispatch (one compiled program per epoch instead of K). ``unroll``
+    DEFAULTS TO 1 because that bit-exactness is part of the engine's
+    contract: unrolling lets XLA fuse across iterations, which reassociates
+    the backward/clip reductions (measured: unroll=2 already diverges in the
+    last fp32 bit while every per-slot loss still matches).
+
+    Deliberately NOT donating the params/opt arguments: the fused-queue
+    engine interchanges checkpoints and recovery semantics with
+    protocol-async, which never invalidates the session's stored state — a
+    fit that raises mid-run must leave ``session.state`` readable. The cost
+    is one trunk-sized copy per EPOCH (not per step), noise on this path."""
+
+    @jax.jit
+    def run_bank(server_params, opt_state, step0, features, labels, valid):
+        def body(carry, slot):
+            params, opt_state, step = carry
+            feats, labs, ok = slot
+
+            def lf(p):
+                out = adapter.server_forward(p, feats)
+                return adapter.loss(out, labs)
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+            updates, new_opt = opt.update(grads, opt_state, params, step)
+            new_params = apply_updates(params, updates)
+            params = jax.tree.map(lambda old, new: jnp.where(ok, new, old),
+                                  params, new_params)
+            opt_state = jax.tree.map(lambda old, new: jnp.where(ok, new, old),
+                                     opt_state, new_opt)
+            step = jnp.where(ok, step + 1, step)
+            return (params, opt_state, step), jnp.where(ok, loss, jnp.nan)
+
+        (server_params, opt_state, step), losses = jax.lax.scan(
+            body, (server_params, opt_state, jnp.asarray(step0, jnp.int32)),
+            (features, labels, valid),
+            unroll=min(unroll, features.shape[0]),
+        )
+        return server_params, opt_state, step, losses
+
+    return run_bank
 
 
 def make_single_client_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer):

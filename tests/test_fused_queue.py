@@ -1,0 +1,206 @@
+"""The fused-queue bridge engine: async-queue arrival semantics on the
+scanned throughput path. Pins the engine's three contracts — σ=0 bit-exact
+parity with ``protocol-async`` (same clients, same arrival order, one scanned
+trunk dispatch instead of one per pop), queue overflow drop/drain accounting
+identical to the round-robin fix, and mid-run save/restore resuming the exact
+continued trajectory."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig, available_engines
+from repro.core.adapters import mlp_adapter
+from repro.core.queue import FeatureBank
+from repro.core.trainer import make_server_bank_runner
+from repro.data import make_cholesterol, split_clients
+from repro.optim import adamw
+from repro.privacy import DPConfig
+
+WEIGHTED = SplitTrainConfig(server_batch=48)  # the paper's 7:2:1
+
+
+@pytest.fixture(scope="module")
+def chol_shards():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y), (x[:100], y[:100])
+
+
+def _fit(adapter, tc, shards, engine, *, epochs=2, steps=6, seed=0, **kw):
+    session = SplitSession(adapter, tc, adamw(1e-2), engine=engine, seed=seed,
+                           threaded=False, **kw)
+    hist = session.fit(shards, epochs=epochs, steps_per_epoch=steps)
+    return session, hist
+
+
+def _assert_state_bitwise_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_registered_in_engine_registry():
+    assert "fused-queue" in available_engines()
+
+
+def test_sigma0_bit_exact_parity_with_protocol_async(chol_shards):
+    """The bridge's core contract: with the guard off, same seed, same
+    round-robin drive, the fused-queue engine's history AND final canonical
+    state are bit-identical to protocol-async — the scanned bank replay IS
+    the protocol's per-pop update sequence, minus the dispatches."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sp, hist_p = _fit(ad, WEIGHTED, shards, "protocol-async", epochs=3)
+    sq, hist_q = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=3)
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_q]
+    assert sp.engine.losses == sq.engine.losses
+    _assert_state_bitwise_equal(sp.state, sq.state)
+    # accounting parity too: same pushes, pops, drops and drains
+    assert sp.engine.stats == sq.engine.stats
+    # and a SECOND fit resumes both engines onto the same fresh stream
+    h2p = sp.fit(shards, epochs=1, steps_per_epoch=6)
+    h2q = sq.fit(shards, epochs=1, steps_per_epoch=6)
+    assert [h["loss"] for h in h2p] == [h["loss"] for h in h2q]
+
+
+def test_sigma_positive_shares_the_protocol_key_schedule(chol_shards):
+    """σ>0: both engines release through the same fold-in key discipline, so
+    even the noised trajectories match bit-for-bit and the accountant sees
+    the same worst-case release count."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = dataclasses.replace(
+        WEIGHTED, privacy=DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    )
+    sp, hist_p = _fit(ad, tc, shards, "protocol-async")
+    sq, hist_q = _fit(ad, tc, shards, "fused-queue")
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_q]
+    assert int(sp.state["privacy"]["releases"]) == int(sq.state["privacy"]["releases"]) > 0
+    assert sp.privacy_report() == sq.privacy_report()
+
+
+def test_queue_overflow_drop_accounting(chol_shards):
+    """A tiny queue forces the PR 2 round-robin behavior: a full queue
+    drains the consumer between pushes (counted as ``drained``) and only
+    batches produced after the target is reached with the queue still full
+    are ``dropped`` — and the bridge's accounting matches protocol-async's
+    number for number."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sp, _ = _fit(ad, WEIGHTED, shards, "protocol-async", epochs=1, steps=3,
+                 queue_size=2)
+    sq, _ = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=1, steps=3,
+                 queue_size=2)
+    assert sq.engine.stats == sp.engine.stats
+    assert sq.engine.stats["dropped"] > 0
+    assert sq.engine.stats["drained"] > 0
+    assert sq.engine.stats["rejected"] > 0
+    # nothing silently vanished: every push was popped into the bank or is
+    # still sitting in the (discarded) queue
+    st = sq.engine.stats
+    assert st["pushed"] - st["popped"] <= 2  # <= queue_size
+    _assert_state_bitwise_equal(sp.state, sq.state)
+
+
+def test_save_restore_mid_run_resumes_identically(tmp_path, chol_shards):
+    """Checkpoint after epoch 2 of 4: a fresh session restoring the
+    checkpoint must continue on the SAME client batch/noise stream (the
+    client RNG base advances with the consumed server step, which is inside
+    the canonical state) and land on bit-identical final losses/state."""
+    shards, (xt, yt) = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session, _ = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=2, steps=5)
+    path = session.save(str(tmp_path))
+
+    fresh = SplitSession(ad, WEIGHTED, adamw(1e-2), engine="fused-queue",
+                         threaded=False, seed=0)
+    manifest = fresh.restore(path)
+    assert manifest["metadata"]["engine"] == "fused-queue"
+    _assert_state_bitwise_equal(session.state, fresh.state)
+
+    hist_continued = session.fit(shards, epochs=2, steps_per_epoch=5)
+    hist_resumed = fresh.fit(shards, epochs=2, steps_per_epoch=5)
+    assert [h["loss"] for h in hist_continued] == [h["loss"] for h in hist_resumed]
+    assert int(fresh.state["step"]) == 20
+    _assert_state_bitwise_equal(session.state, fresh.state)
+    assert session.evaluate(xt, yt) == fresh.evaluate(xt, yt)
+
+
+def test_checkpoints_interchange_with_protocol_async(tmp_path, chol_shards):
+    """The two queue engines share one canonical layout: a fused-queue
+    checkpoint restores into protocol-async (and trains on the same stream
+    it would have drawn natively)."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sq, _ = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=1, steps=4)
+    path = sq.save(str(tmp_path))
+    sp = SplitSession(ad, WEIGHTED, adamw(1e-2), engine="protocol-async",
+                      threaded=False, seed=0)
+    sp.restore(path)
+    _assert_state_bitwise_equal(sq.state, sp.state)
+    hq = sq.fit(shards, epochs=1, steps_per_epoch=4)
+    hp = sp.fit(shards, epochs=1, steps_per_epoch=4)
+    assert [h["loss"] for h in hq] == [h["loss"] for h in hp]
+
+
+def test_steps_per_epoch_is_pure_chunk_size(chol_shards):
+    """For the banked engine the step counter and client RNG bases are
+    absolute, so steps_per_epoch only chunks the bank: 3 epochs x 4 steps
+    replays 1 epoch x 12 steps bit-for-bit (the documented way to bound the
+    bank's device memory)."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    a, _ = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=1, steps=12)
+    b, _ = _fit(ad, WEIGHTED, shards, "fused-queue", epochs=3, steps=4)
+    assert a.engine.losses == b.engine.losses
+    _assert_state_bitwise_equal(a.state, b.state)
+
+
+def test_zero_steps_per_epoch_rejected(chol_shards):
+    """steps_per_epoch=0 would diverge per engine (empty bank vs empty loss
+    slice); the session fails loud for every engine instead."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    for engine in ("fused-queue", "protocol-async", "fused-scan"):
+        s = SplitSession(ad, WEIGHTED, adamw(1e-2), engine=engine,
+                         **({"threaded": False} if "queue" in engine or "protocol" in engine else {}))
+        with pytest.raises(ValueError, match="steps_per_epoch"):
+            s.fit(shards, epochs=1, steps_per_epoch=0)
+
+
+def test_partial_bank_masks_invalid_slots(chol_shards):
+    """A half-filled FeatureBank (e.g. a final drain) must train on exactly
+    the accepted items: masked slots are identity updates — params, moments
+    and the step counter hold still, and their losses come back NaN."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    opt = adamw(1e-2)
+    key = jax.random.PRNGKey(0)
+    server = jax.tree.map(jnp.array, ad.init(key)["server"])
+    opt_state = opt.init(server)
+
+    x, y = shards[0]
+    feats = jnp.asarray(ad.client_forward(ad.init(key)["client"], x[:8], None))
+    bank = FeatureBank(capacity=4)
+    bank.accept(0, feats, y[:8])
+    bank.accept(0, feats, y[:8])
+    F, L, V = bank.stacked()
+    assert F.shape[0] == 4 and bool(V[1]) and not bool(V[2])
+
+    run_bank = make_server_bank_runner(ad, opt, 1.0)
+    p2, o2, step, losses = run_bank(server, opt_state, 0, F, L, V)
+    assert int(step) == 2  # only the valid slots advanced the counter
+    losses = np.asarray(losses)
+    assert np.isfinite(losses[:2]).all() and np.isnan(losses[2:]).all()
+
+    # replaying ONLY the valid items reproduces the same params exactly
+    server_b = jax.tree.map(jnp.array, ad.init(key)["server"])
+    bank_b = FeatureBank(capacity=2)
+    bank_b.accept(0, feats, y[:8])
+    bank_b.accept(0, feats, y[:8])
+    p3, _, _, _ = make_server_bank_runner(ad, opt, 1.0)(
+        server_b, opt.init(server_b), 0, *bank_b.stacked()
+    )
+    _assert_state_bitwise_equal(p2, p3)

@@ -157,10 +157,12 @@ def test_budget_leaves_accumulate_on_device():
 
 # ----------------------------------------------------- guard across engines
 def test_guard_parity_across_engines_sigma0_and_sigma_pos(chol_shards):
-    """All five engines run with the guard at the cut. The three SPMD
+    """All six engines run with the guard at the cut. The three SPMD
     engines share one key schedule, so their losses agree (scan/stepwise to
     the last bit at σ=0; to fp32 reassociation once the clip reduction is
-    in play); protocol/fedavg train finitely and account their releases."""
+    in play); protocol/fused-queue/fedavg train finitely and account their
+    releases (the two queue engines bit-match each other — pinned harder in
+    tests/test_fused_queue.py)."""
     shards, _ = chol_shards
     ad = mlp_adapter(CHOLESTEROL_MLP)
     for dp in (DPConfig(epsilon=1e6, delta=1e-5, clip_norm=1e9),  # σ≈0 regime
@@ -170,6 +172,7 @@ def test_guard_parity_across_engines_sigma0_and_sigma_pos(chol_shards):
         for engine, kw in [("fused-scan", {}), ("fused-stepwise", {}),
                            ("looped-ref", {}),
                            ("protocol-async", {"threaded": False}),
+                           ("fused-queue", {"threaded": False}),
                            ("fedavg", {})]:
             s = SplitSession(ad, tc, adamw(1e-2), engine=engine, **kw)
             h = s.fit(shards, epochs=2, steps_per_epoch=4)
@@ -184,6 +187,8 @@ def test_guard_parity_across_engines_sigma0_and_sigma_pos(chol_shards):
                                    rtol=1e-5)
         np.testing.assert_allclose(losses["fused-scan"], losses["looped-ref"],
                                    rtol=1e-4)
+        # the queue engines share clients AND keys: exact equality
+        assert losses["protocol-async"] == losses["fused-queue"]
         # fused/looped: one release per optimizer step
         assert losses["fused-scan"] is not None
 

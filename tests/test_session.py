@@ -32,7 +32,7 @@ def _losses(adapter, tc, shards, engine, *, epochs=2, steps=4, seed=0, **kw):
 
 def test_registry_lists_all_engines():
     assert {"auto", "fused-scan", "fused-stepwise", "looped-ref",
-            "protocol-async", "fedavg"} <= set(available_engines())
+            "protocol-async", "fused-queue", "fedavg"} <= set(available_engines())
     with pytest.raises(ValueError, match="unknown engine"):
         SplitSession(mlp_adapter(CHOLESTEROL_MLP), UNIFORM, adamw(1e-2),
                      engine="no-such-engine")

@@ -1,0 +1,133 @@
+"""Docs CI: link-check the markdown front door and smoke-run the README.
+
+Two jobs, zero dependencies beyond the repo itself:
+
+  1. Every relative link in README.md, ROADMAP.md and docs/*.md must
+     resolve — the target file exists, and if the link carries a
+     ``#fragment`` the target (or same) file has a heading whose
+     GitHub-style slug matches. External (http/mailto) links are skipped:
+     CI must not flake on the internet.
+  2. The FIRST fenced ```python block in README.md (the quickstart) is
+     executed as-is in a scratch cwd with PYTHONPATH=src — the quickstart
+     is a promise to newcomers, so it is tested like one.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def doc_files():
+    files = [os.path.join(REPO, "README.md"), os.path.join(REPO, "ROADMAP.md")]
+    docs = os.path.join(REPO, "docs")
+    files += sorted(
+        os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+    )
+    return [f for f in files if os.path.isfile(f)]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: drop code ticks, lowercase, strip everything
+    but word chars/spaces/hyphens, spaces -> hyphens."""
+    h = heading.replace("`", "").strip().lower()
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h)
+
+
+def slugs_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        # strip code first: a column-0 '# comment' inside a fenced block is
+        # not a heading and must not satisfy an anchor check
+        return {
+            github_slug(m.group(1))
+            for m in HEADING_RE.finditer(strip_code(f.read()))
+        }
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code so example links like
+    [(x_c, y_c)] or dict literals inside snippets aren't link-checked."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_links() -> list:
+    errors = []
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = strip_code(f.read())
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, fragment = target.partition("#")
+            if file_part:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), file_part)
+                )
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {target}")
+                    continue
+            else:
+                dest = path  # bare #fragment: same file
+            if fragment:
+                if not dest.endswith(".md"):
+                    errors.append(f"{rel}: fragment on non-markdown -> {target}")
+                elif fragment not in slugs_of(dest):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def run_quickstart() -> list:
+    readme = os.path.join(REPO, "README.md")
+    with open(readme, encoding="utf-8") as f:
+        blocks = FENCE_RE.findall(f.read())
+    if not blocks:
+        return ["README.md: no ```python quickstart block found"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    with tempfile.TemporaryDirectory() as scratch:
+        proc = subprocess.run(
+            [sys.executable, "-c", blocks[0]],
+            cwd=scratch, env=env, capture_output=True, text=True, timeout=900,
+        )
+    if proc.returncode != 0:
+        return [
+            "README.md quickstart failed "
+            f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+        ]
+    print("README quickstart output:")
+    print(proc.stdout.rstrip())
+    return []
+
+
+def main() -> int:
+    errors = check_links()
+    files = [os.path.relpath(p, REPO) for p in doc_files()]
+    print(f"link-checked {len(files)} files: {', '.join(files)}")
+    errors += run_quickstart()
+    if errors:
+        print("\nDOCS CHECK FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
