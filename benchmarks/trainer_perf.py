@@ -16,19 +16,27 @@ Measures steps/sec of the CPU demo CNN config on synthetic COVID-CT data:
     read once per epoch. Timing one epoch = one ``session.fit`` call, so the
     session facade's per-epoch overhead is IN the measurement.
   * ``protocol`` — the wall-clock async-queue engine (engine=
-    "protocol-async", deterministic round-robin): real client objects
-    pushing released feature maps through a ``FeatureQueue``, one trunk
+    "protocol-async", deterministic round-robin, per-item production):
+    real client objects pushing released feature maps through a
+    ``FeatureQueue``, one client forward dispatch per push and one trunk
     dispatch + host round-trip per pop.
   * ``fused_queue`` — the SAME queue arrival semantics bridged onto the
-    scanned path (engine="fused-queue"): arrivals bank into padded device
-    slots + validity mask, the epoch's trunk updates run as ONE scan
-    dispatch, σ=0 bit-identical to ``protocol``. Acceptance: ≥ the
-    protocol baseline steps/s (same clients, the per-pop dispatch is the
-    only thing removed).
+    scanned path (engine="fused-queue", per-item production): arrivals
+    bank into padded device slots + validity mask, the epoch's trunk
+    updates run as ONE scan dispatch, σ=0 bit-identical to ``protocol``.
+    Acceptance: ≥ the protocol baseline steps/s (same clients, the
+    per-pop dispatch is the only thing removed).
+  * ``protocol_fleet`` / ``fused_queue_fleet`` — the same two engines with
+    fleet PRODUCTION (production="fleet", the default): every queue
+    cycle's client forwards + guard releases run as one vmapped dispatch
+    over the stacked banks, bit-identical per item to the per-item rows.
+    Acceptance: fused_queue_fleet ≥ 1.5x fused_queue (the per-item
+    client dispatches are the only thing removed).
 
 Each path is timed best-of-``reps`` (the shared CI host is noisy; min
 time is the closest estimate of true cost). Writes ``BENCH_trainer.json``
 — the machine-readable perf trajectory later PRs must not regress.
+docs/benchmarks.md explains every recorded row.
 
   PYTHONPATH=src python -m benchmarks.trainer_perf
 """
@@ -204,9 +212,17 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
         "fused": _session_epoch_timer(adapter, tc, shards, steps, "auto"),
         "guard": _session_epoch_timer(adapter, tc_guard, shards, steps, "auto"),
         "proto": _session_epoch_timer(adapter, tc, shards, steps,
-                                      "protocol-async", threaded=False),
+                                      "protocol-async", threaded=False,
+                                      production="per-item"),
         "fq": _session_epoch_timer(adapter, tc, shards, steps,
-                                   "fused-queue", threaded=False),
+                                   "fused-queue", threaded=False,
+                                   production="per-item"),
+        "proto_fleet": _session_epoch_timer(adapter, tc, shards, steps,
+                                            "protocol-async", threaded=False,
+                                            production="fleet"),
+        "fq_fleet": _session_epoch_timer(adapter, tc, shards, steps,
+                                         "fused-queue", threaded=False,
+                                         production="fleet"),
     }
     best = {name: 0.0 for name in timers}
     order = list(timers)
@@ -218,9 +234,11 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
     seed_sps, fused_sps, guard_sps, proto_sps, fq_sps = (
         best["seed"], best["fused"], best["guard"], best["proto"], best["fq"]
     )
+    proto_fleet_sps, fq_fleet_sps = best["proto_fleet"], best["fq_fleet"]
     speedup = fused_sps / seed_sps
     guard_overhead_pct = (1.0 - guard_sps / fused_sps) * 100.0
     queue_bridge_speedup = fq_sps / proto_sps
+    fleet_production_speedup = fq_fleet_sps / fq_sps
     record = {
         "suite": "trainer",
         "config": {
@@ -234,15 +252,19 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
             "api": "SplitSession(engine='auto')",
             "guard": "DPConfig(eps=1.0, delta=1e-5, clip=1.0), XLA release path",
             "queue": "round-robin drive, queue_size=64, client_batch=server_batch//n_clients",
+            "fleet": "production='fleet' vs 'per-item' on the same engines (bit-identical items)",
         },
         "seed_steps_per_sec": seed_sps,
         "fused_steps_per_sec": fused_sps,
         "fused_guard_steps_per_sec": guard_sps,
         "protocol_steps_per_sec": proto_sps,
         "fused_queue_steps_per_sec": fq_sps,
+        "protocol_fleet_steps_per_sec": proto_fleet_sps,
+        "fused_queue_fleet_steps_per_sec": fq_fleet_sps,
         "speedup": speedup,
         "guard_overhead_pct": guard_overhead_pct,
         "queue_bridge_speedup": queue_bridge_speedup,
+        "fleet_production_speedup": fleet_production_speedup,
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2)
@@ -255,6 +277,10 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
         ("trainer/protocol_step", 1e6 / proto_sps, f"steps_per_sec={proto_sps:.1f}"),
         ("trainer/fused_queue_step", 1e6 / fq_sps,
          f"steps_per_sec={fq_sps:.1f};vs_protocol={queue_bridge_speedup:.2f}x"),
+        ("trainer/protocol_fleet_step", 1e6 / proto_fleet_sps,
+         f"steps_per_sec={proto_fleet_sps:.1f};vs_per_item={proto_fleet_sps / proto_sps:.2f}x"),
+        ("trainer/fused_queue_fleet_step", 1e6 / fq_fleet_sps,
+         f"steps_per_sec={fq_fleet_sps:.1f};vs_per_item={fleet_production_speedup:.2f}x"),
     ]
 
 

@@ -16,15 +16,22 @@ client/arrival half of BOTH queue-fed engines. ``protocol-async`` pairs the
 queue pop); ``fused-queue`` pairs the SAME clients and the SAME
 :func:`drive_protocol` arrival order with a :class:`BankedConsumer`, which
 accumulates pops into a ``core.queue.FeatureBank`` for one scanned server
-dispatch per epoch (``core.trainer.make_server_bank_runner``). Canonical
-state leaves owned here: ``client_banks`` live inside the ``SplitClient``
-objects (one bank per hospital, never crossing the trust boundary) and
-``server``/``opt``/``step`` inside ``SplitServer`` — the engines assemble
-the canonical pytree from those after each epoch; the ``privacy`` budget
-leaf is advanced by the engines from ``SplitClient.releases``.
+dispatch per epoch (``core.trainer.make_server_bank_runner``). Production
+side, :class:`FleetProducer` batches the fleet: instead of one jitted
+client forward per push, every queue cycle's releases run as ONE vmapped
+dispatch over the stacked client banks (the canonical stacked-bank layout),
+bit-identical per item to ``SplitClient.produce`` — see
+:func:`make_fleet_release_fwd`. Canonical state leaves owned here:
+``client_banks`` live inside the ``SplitClient`` objects (one bank per
+hospital, never crossing the trust boundary; the fleet's stacked view is a
+device-side restatement of the same banks on the CLIENT side of the cut)
+and ``server``/``opt``/``step`` inside ``SplitServer`` — the engines
+assemble the canonical pytree from those after each epoch; the ``privacy``
+budget leaf is advanced by the engines from ``SplitClient.releases``.
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 import warnings
@@ -35,9 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapters import SplitAdapter
-from repro.core.queue import FeatureQueue
+from repro.core.queue import FeatureQueue, FeatureSlice
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
-from repro.privacy.guard import PrivacyGuard
+from repro.privacy.guard import PrivacyGuard, batched_release_keys
 
 
 def make_client_release_fwd(adapter: SplitAdapter,
@@ -53,6 +60,44 @@ def make_client_release_fwd(adapter: SplitAdapter,
             lambda p, x, k: guard(guard.key_for(k), adapter.client_forward(p, x, k))
         )
     return jax.jit(lambda p, x, k: adapter.client_forward(p, x, k))
+
+
+def make_fleet_release_fwd(adapter: SplitAdapter,
+                           guard: Optional[PrivacyGuard] = None):
+    """The fleet-batched client release: ``(stacked_banks, base_keys, cids,
+    releases, xs) -> features [N, b, ...]`` — one jitted dispatch for a whole
+    queue cycle of releases, in place of N ``make_client_release_fwd`` calls.
+
+    ``stacked_banks`` is the canonical stacked-bank layout (every leaf with
+    a leading ``[n_clients]`` axis, same as ``session.py``'s canonical
+    state); ``base_keys`` the stacked per-client noise base keys; ``cids``
+    ``[N]`` int item client ids and ``releases`` ``[N]`` int per-item
+    release counters. Per item, this computes EXACTLY what
+    ``SplitClient.produce`` computes — ``fwd(banks[cid], x,
+    fold_in(base_keys[cid], release))`` with the guard at the cut — but the
+    bank gather, the fold-in key schedule
+    (``privacy.guard.batched_release_keys``) and the vmapped forward+release
+    all live inside ONE compiled program. Every stage is bit-preserving:
+    the gather moves data, fold_in is counter-based threefry (batching
+    doesn't change the math), and vmapping the forward/guard over the item
+    axis yields the same per-item lanes XLA would compute alone — pinned by
+    ``tests/test_fleet_production.py``.
+    """
+    guard = guard if guard is not None else PrivacyGuard()
+
+    def one(bank, x, key):
+        f = adapter.client_forward(bank, x, key)
+        return guard(guard.key_for(key), f) if guard.enabled else f
+
+    vfwd = jax.vmap(one)
+
+    @jax.jit
+    def fleet(stacked_banks, base_keys, cids, releases, xs):
+        banks = jax.tree.map(lambda a: jnp.take(a, cids, axis=0), stacked_banks)
+        keys = batched_release_keys(jnp.take(base_keys, cids, axis=0), releases)
+        return vfwd(banks, xs, keys)
+
+    return fleet
 
 
 class SplitClient:
@@ -92,14 +137,97 @@ class SplitClient:
                      else jax.random.PRNGKey(noise_seed + client_id))
         self._fwd = fwd if fwd is not None else make_client_release_fwd(adapter, guard)
 
+    def sample_batch(self):
+        """One host-side batch draw ``(x[idx], y[idx])`` from this client's
+        private sampling RNG. Shared by :meth:`produce` and
+        :class:`FleetProducer` so per-item and fleet production consume the
+        SAME per-client index stream in the same order — half of the fleet
+        path's bit-parity contract."""
+        idx = self._rng.integers(0, len(self.x), size=self.batch)
+        return self.x[idx], self.y[idx]
+
     def produce(self):
         """One queue item: (released feature map, labels). Raw x never returned."""
-        idx = self._rng.integers(0, len(self.x), size=self.batch)
-        xb = jnp.asarray(self.x[idx])
+        xb_host, yb = self.sample_batch()
+        xb = jnp.asarray(xb_host)
         self.releases += 1
         key = jax.random.fold_in(self._key, self.releases)
         features = self._fwd(self.params, xb, key)
-        return (np.asarray(features) if self._as_numpy else features), self.y[idx]
+        return (np.asarray(features) if self._as_numpy else features), yb
+
+
+class FleetProducer:
+    """Vmapped production across the client fleet: one jitted dispatch per
+    queue cycle instead of one per push.
+
+    Wraps a prebuilt ``SplitClient`` fleet. The clients' banks are stacked
+    ONCE into the canonical stacked-bank layout (leading ``[n_clients]``
+    axis — the same device view ``session.py`` uses for every fused engine;
+    the stack lives on the CLIENT side of the cut, so still only released
+    features reach the queue), their noise base keys likewise. A production
+    request for ``counts[c]`` items per client then:
+
+      1. draws every item's batch indices from each client's OWN sampling
+         RNG via ``SplitClient.sample_batch`` — identical host draws, in
+         identical per-client order, to the per-item path;
+      2. advances each client's ``releases`` by exactly ``counts[c]`` (the
+         accountant sees the same worst-case count — the drive loop's cycle
+         planner guarantees the per-item path would have produced exactly
+         these items);
+      3. runs ONE :func:`make_fleet_release_fwd` dispatch — bank gather,
+         ``fold_in`` key schedule and vmapped forward+guard all fused;
+      4. returns the items IN PER-ITEM PRODUCTION ORDER as
+         ``(client_id, FeatureSlice, labels)`` — zero-copy references into
+         the batched release array, materialized only where a consumer
+         needs a single row.
+
+    Distinct total item counts compile separate fleet programs (the item
+    axis is a static shape); a run settles on one steady-state cycle shape
+    plus at most a couple of tail shapes.
+    """
+
+    def __init__(self, clients: Sequence[SplitClient], fleet_fwd, *,
+                 chunk: int = 8):
+        self.clients = list(clients)
+        self.chunk = int(chunk)  # threaded mode's per-client dispatch width
+        self._fwd = fleet_fwd
+        self._banks = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[c.params for c in self.clients]
+        )
+        self._keys = jnp.stack([c._key for c in self.clients])
+
+    def produce(self, counts: Sequence[int]) -> collections.deque:
+        """Produce ``counts[c]`` items for client ``c`` (cycle order: all of
+        client 0's items, then client 1's, ...) in one dispatch; returns a
+        deque of ``(client_id, features, labels)`` queue items."""
+        cids, rels, xs, labels = [], [], [], []
+        for client, cnt in zip(self.clients, counts):
+            for j in range(int(cnt)):
+                xb, yb = client.sample_batch()
+                xs.append(xb)
+                labels.append(yb)
+                cids.append(client.client_id)
+                rels.append(client.releases + 1 + j)
+            client.releases += int(cnt)
+        if not cids:
+            return collections.deque()
+        feats = self._fwd(
+            self._banks, self._keys,
+            jnp.asarray(cids, jnp.int32), jnp.asarray(rels, jnp.int32),
+            jnp.asarray(np.stack(xs)),
+        )
+        return collections.deque(
+            (cid, FeatureSlice(feats, i), labels[i])
+            for i, cid in enumerate(cids)
+        )
+
+    def produce_for(self, client: SplitClient, n: int) -> collections.deque:
+        """Threaded mode: ``n`` upcoming items for ONE client in one
+        dispatch (each client thread batches its own lookahead; releases
+        advance at production, like the per-item path — every batch in the
+        chunk leaves the privacy layer)."""
+        counts = [n if c is client else 0 for c in self.clients]
+        return self.produce(counts)
 
 
 class SplitServer:
@@ -172,6 +300,44 @@ class BankedConsumer:
         return None  # no loss yet — it materializes in the scanned epoch
 
 
+def _plan_round_robin_cycle(
+    queue_len: int, queue_size: int, step: int, total: int,
+    quanta: Sequence[int],
+) -> List[int]:
+    """How many items each client PRODUCES in one round-robin cycle — the
+    per-item drive's lazy production contract, restated as pure counting so
+    fleet production can batch a cycle without over-producing.
+
+    The per-item loop produces an item only immediately before its push
+    attempt, so in the drive's final cycle production stops early: at a
+    client boundary once the step target is reached, or one item after the
+    queue jams (that item is the ``dropped`` one). Both conditions are a
+    deterministic function of (queue occupancy, consumed steps) because in
+    round-robin mode the consumer advances ONLY through drains: a client
+    with quantum ``q`` gets ``free_slots + (total - step)`` successful
+    pushes before the queue jams — each push either takes a free slot or
+    forces exactly one drain. Producing more than the per-item path would
+    have produced is not a harmless overshoot: it would advance the
+    clients' sampling RNGs and ``releases`` counters past the per-item
+    stream, breaking resume parity and the (ε, δ) accounting — pinned by
+    ``tests/test_fleet_production.py``.
+    """
+    counts = [0] * len(quanta)
+    for i, q in enumerate(int(x) for x in quanta):
+        if step >= total:
+            break
+        free = queue_size - queue_len
+        capacity = free + (total - step)
+        if q <= capacity:
+            counts[i] = q
+            step += max(0, q - free)           # drains this quantum forces
+            queue_len = min(queue_size, queue_len + q)
+        else:  # jams: `capacity` pushes land, the (capacity+1)-th drops
+            counts[i] = capacity + 1
+            break
+    return counts
+
+
 def drive_protocol(
     clients: Sequence[SplitClient],
     server,
@@ -180,6 +346,7 @@ def drive_protocol(
     total_server_steps: int,
     *,
     threaded: bool = True,
+    fleet: Optional[FleetProducer] = None,
 ) -> Dict[str, int]:
     """Drive prebuilt clients + a consumer until ``server.step_count``
     reaches ``total_server_steps`` (an ABSOLUTE target, so repeated calls
@@ -188,22 +355,45 @@ def drive_protocol(
     :class:`BankedConsumer` (fused-queue) — both engines share this exact
     arrival order, which is what makes their σ=0 runs bit-identical.
 
+    With a :class:`FleetProducer` (``fleet=``), production is batched: the
+    round-robin drive plans each cycle (:func:`_plan_round_robin_cycle`)
+    and produces all of its items in ONE vmapped dispatch, then replays the
+    per-item push/drain/drop state machine over the prefetched items — the
+    queue sees identical arrivals, the accounting identical events, and the
+    items themselves are bit-identical. The threaded drive has each client
+    thread produce ``fleet.chunk`` items per dispatch instead of one.
+    Fleet planning assumes drains always make room, so a queue with a
+    ``per_client_cap`` falls back to per-item production (the cap rejects
+    pushes the planner cannot see).
+
     Returns accounting for the engines' ``queue_stats``:
       * ``dropped`` — produced batches never enqueued (0 unless the run
         stops while the queue is full);
       * ``drained`` — consumptions forced by a FULL queue between pushes
         (the PR 2 round-robin fix: a full queue drains the consumer instead
         of silently dropping the batch; always 0 in threaded mode, where
-        the consumer pops continuously).
+        the consumer pops continuously). A drain is counted only when the
+        consumer actually advanced — a ``train_one`` that consumes nothing
+        (e.g. a cap-rejected push with nothing poppable) breaks out to the
+        drop accounting instead of spinning and inflating the count.
     """
     dropped = drained = 0
     if threaded:
         stop = threading.Event()
 
         def client_loop(client: SplitClient, share: float):
+            pending: collections.deque = collections.deque()
             while not stop.is_set():
-                f, l = client.produce()
-                while not queue.push(client.client_id, f, l) and not stop.is_set():
+                if not pending:
+                    # one dispatch per chunk of releases (or per item when
+                    # driving without a fleet)
+                    if fleet is not None:
+                        pending = fleet.produce_for(client, fleet.chunk)
+                    else:
+                        f, l = client.produce()
+                        pending.append((client.client_id, f, l))
+                cid, f, l = pending.popleft()
+                while not queue.push(cid, f, l) and not stop.is_set():
                     time.sleep(0.001)  # backpressure
                 # arrival rate ∝ data share (bigger hospitals push more often)
                 time.sleep(max(0.0005, 0.002 * (1 - share)))
@@ -221,20 +411,36 @@ def drive_protocol(
             t.join(timeout=2.0)
     else:  # deterministic round-robin (rate ∝ share)
         quanta = np.maximum(1, np.round(np.asarray(shares) * 10).astype(int))
+        plan_cycles = fleet is not None and queue.per_client_cap is None
         while server.step_count < total_server_steps:
+            pending = None
+            if plan_cycles:
+                pending = fleet.produce(_plan_round_robin_cycle(
+                    len(queue), queue.max_size, server.step_count,
+                    total_server_steps, quanta,
+                ))
             for c, q in zip(clients, quanta):
                 if server.step_count >= total_server_steps:
                     break
                 for _ in range(int(q)):
-                    f, l = c.produce()
+                    if pending is not None:
+                        if not pending:  # planner: never produced per-item
+                            break
+                        cid, f, l = pending.popleft()
+                    else:
+                        f, l = c.produce()
+                        cid = c.client_id
                     # a full queue DRAINS the consumer instead of dropping
                     # the batch (the seed ignored push()'s return value here,
                     # so rejected items silently vanished)
-                    pushed = queue.push(c.client_id, f, l)
+                    pushed = queue.push(cid, f, l)
                     while not pushed and server.step_count < total_server_steps:
+                        before = server.step_count
                         server.train_one(timeout=0.0)
+                        if server.step_count == before:
+                            break  # consumer can't make room: fall through
                         drained += 1
-                        pushed = queue.push(c.client_id, f, l)
+                        pushed = queue.push(cid, f, l)
                     if not pushed:  # target reached with the queue still full
                         dropped += 1
                         break

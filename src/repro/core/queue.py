@@ -10,12 +10,16 @@ Role in the engine registry (``repro.core.session``): this module is the
 transport layer of both queue-fed engines — ``protocol-async`` pops one item
 per trunk update, ``fused-queue`` drains arrivals into a :class:`FeatureBank`
 (padded slots + validity mask) that feeds ONE scanned server dispatch per
-epoch (``repro.core.trainer.make_server_bank_runner``). It owns NO canonical
-state leaves: everything in here is transient transport; parameters,
-optimizer moments, the step counter and the privacy budget stay with the
-engines. Accounting (``stats()``: pushed/popped/rejected, plus the drive
-loop's dropped/drained counts surfaced through the engines' ``queue_stats``)
-is the audit trail for the paper's imbalance claims.
+epoch (``repro.core.trainer.make_server_bank_runner``). Fleet production
+(``protocol.FleetProducer``) pushes :class:`FeatureSlice` items — zero-copy
+references into one batched release array per queue cycle — so the queue
+keeps its per-item arrival order and accounting while the feature payload
+moves as ONE device array. It owns NO canonical state leaves: everything in
+here is transient transport; parameters, optimizer moments, the step counter
+and the privacy budget stay with the engines. Accounting (``stats()``:
+pushed/popped/rejected, plus the drive loop's dropped/drained counts
+surfaced through the engines' ``queue_stats``) is the audit trail for the
+paper's imbalance claims.
 """
 from __future__ import annotations
 
@@ -24,6 +28,37 @@ import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+class FeatureSlice:
+    """Zero-copy reference to row ``index`` of a batched release ``parent``.
+
+    Fleet production computes a whole queue cycle's releases as one
+    ``[N, b, ...]`` device array; each queue item then carries a
+    ``FeatureSlice`` instead of a materialized per-item array, so nothing
+    is gathered or copied until a consumer actually needs the features:
+
+      * ``jnp.asarray(slice)`` (via ``__jax_array__``) materializes one
+        row — the per-pop path (``protocol.SplitServer``) reads it exactly
+        as it would a plain array, bit-for-bit;
+      * :meth:`FeatureBank.stacked` recognizes runs of slices sharing a
+        parent and gathers each run with ONE ``jnp.take`` instead of a
+        dispatch per item (a gather is pure data movement, so the stacked
+        bank is bit-identical to stacking materialized rows).
+    """
+
+    __slots__ = ("parent", "index")
+
+    def __init__(self, parent, index: int):
+        self.parent = parent
+        self.index = int(index)
+
+    def __jax_array__(self):
+        return self.parent[self.index]
+
+    @property
+    def shape(self):
+        return self.parent.shape[1:]
 
 
 class FeatureQueue:
@@ -37,6 +72,14 @@ class FeatureQueue:
         self.pushed = 0
         self.popped = 0
         self.rejected = 0
+
+    @property
+    def max_size(self) -> int:
+        return self._max_size
+
+    @property
+    def per_client_cap(self) -> Optional[int]:
+        return self._per_client_cap
 
     def push(self, client_id, features, labels) -> bool:
         """Non-blocking push. Returns False if the queue (or client cap) is full."""
@@ -127,13 +170,17 @@ class FeatureBank:
         K = ``capacity``; slots past ``len(self)`` are zero-padded and masked
         invalid. Features keep their incoming type (device arrays stay on
         device — the stack is the host->device boundary, one transfer per
-        epoch instead of one per server step).
+        epoch instead of one per server step). Runs of :class:`FeatureSlice`
+        items that share a fleet-produced parent batch are gathered with one
+        ``jnp.take`` per parent (bit-identical to stacking the rows one by
+        one — a gather only moves data) so the fleet path pays one dispatch
+        per production cycle here, not one per banked item.
         """
         import jax.numpy as jnp
 
         assert len(self) > 0, "stacking an empty FeatureBank"
         n, k = len(self), self.capacity
-        feats = jnp.stack([jnp.asarray(f) for f in self._features])
+        feats = _stack_features(self._features)
         labels = jnp.stack([jnp.asarray(l) for l in self._labels])
         if n < k:
             feats = jnp.concatenate(
@@ -144,3 +191,25 @@ class FeatureBank:
             )
         valid = jnp.asarray(np.arange(k) < n)
         return feats, labels, valid
+
+
+def _stack_features(items: List[Any]):
+    """Stack banked feature items into ``[K, b, ...]``, gathering each run
+    of same-parent :class:`FeatureSlice` refs with one ``jnp.take``."""
+    import jax.numpy as jnp
+
+    chunks, i, n = [], 0, len(items)
+    while i < n:
+        f = items[i]
+        if isinstance(f, FeatureSlice):
+            j, idxs = i, []
+            while (j < n and isinstance(items[j], FeatureSlice)
+                   and items[j].parent is f.parent):
+                idxs.append(items[j].index)
+                j += 1
+            chunks.append(jnp.take(f.parent, jnp.asarray(idxs), axis=0))
+            i = j
+        else:
+            chunks.append(jnp.asarray(f)[None])
+            i += 1
+    return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=0)

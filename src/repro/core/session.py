@@ -313,14 +313,18 @@ class ProtocolEngine:
     behind the session surface: real client/server objects communicating
     only through a ``FeatureQueue``. One ``steps_per_epoch`` = one server
     queue pop + trunk update. ``threaded=False`` is the deterministic
-    round-robin mode (used by the parity tests)."""
+    round-robin mode (used by the parity tests). ``production="fleet"``
+    (default) batches the fleet's releases — one vmapped dispatch per queue
+    cycle over the stacked client banks, bit-identical per item to
+    ``production="per-item"`` (see ``protocol.FleetProducer``)."""
 
     name = "protocol-async"
 
     def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
                  opt: Optimizer, *, mesh: Optional[Mesh] = None,
                  threaded: bool = False, client_batch: Optional[int] = None,
-                 queue_size: int = 64, per_client_cap: Optional[int] = None):
+                 queue_size: int = 64, per_client_cap: Optional[int] = None,
+                 production: str = "fleet", fleet_chunk: int = 8):
         if mesh is not None:
             raise ValueError(
                 f"{self.name} does not support mesh=; use a fused engine"
@@ -330,15 +334,31 @@ class ProtocolEngine:
                 f"{self.name} trains the server trunk only (the paper's "
                 "detached regime); mode='e2e' needs a fused or looped engine"
             )
+        if production not in ("fleet", "per-item"):
+            raise ValueError(
+                f"production must be 'fleet' or 'per-item', got {production!r}"
+            )
+        if fleet_chunk < 1:
+            # a 0-item chunk would starve the threaded client loops forever
+            # (empty production deque -> dead producer threads -> the drive
+            # spins on an empty queue); fail loud at construction instead
+            raise ValueError(f"fleet_chunk must be >= 1, got {fleet_chunk}")
         self.adapter, self.tc, self.opt = adapter, tc, opt
         self.threaded = threaded
         self.client_batch = client_batch or fused_client_batch(tc)
         self.queue_size, self.per_client_cap = queue_size, per_client_cap
+        # production="fleet" (default): one vmapped release dispatch per
+        # queue cycle over the stacked client banks, bit-identical per item
+        # to "per-item" (one jitted dispatch per push — the PR 4 path, kept
+        # as the parity reference). fleet_chunk is the threaded drive's
+        # per-client lookahead (items per dispatch).
+        self.production, self.fleet_chunk = production, fleet_chunk
         self.guard = PrivacyGuard.from_config(tc.privacy)
         # ONE jitted client release shared by the whole fleet across fits
         # (params are arguments, so per-client/per-fit retraces would only
-        # re-derive the same program)
+        # re-derive the same program); ditto the fleet-batched release
         self._client_fwd = protocol_mod.make_client_release_fwd(adapter, self.guard)
+        self._fleet_fwd = protocol_mod.make_fleet_release_fwd(adapter, self.guard)
         self.losses: List[float] = []
         self.stats: Dict[str, Any] = {}
 
@@ -403,7 +423,18 @@ class ProtocolEngine:
             opt_state=state["opt"], step_count=int(state["step"]),
         )
 
-    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch):
+    def _make_fleet(self, clients):
+        """The fleet-batched producer over this run's clients (banks are
+        frozen for the whole run — these engines are structurally detached),
+        or ``None`` in per-item mode."""
+        if self.production != "fleet":
+            return None
+        return protocol_mod.FleetProducer(
+            clients, self._fleet_fwd, chunk=self.fleet_chunk
+        )
+
+    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch,
+                       fleet=None):
         """Drive one epoch through ``drive_protocol`` and return
         ``(losses, server_params, opt_state, step, drive_stats)``. Every
         line of bookkeeping AROUND this hook is shared with the fused-queue
@@ -412,6 +443,7 @@ class ProtocolEngine:
         d = protocol_mod.drive_protocol(
             clients, consumer, queue, shares,
             consumer.step_count + steps_per_epoch, threaded=self.threaded,
+            fleet=fleet,
         )
         return (consumer.losses[-steps_per_epoch:], consumer.params,
                 consumer.opt_state, consumer.step_count, d)
@@ -423,13 +455,14 @@ class ProtocolEngine:
         queue = FeatureQueue(max_size=self.queue_size,
                              per_client_cap=self.per_client_cap)
         clients = self._make_clients(state, shards)
+        fleet = self._make_fleet(clients)
         consumer = self._make_consumer(state, queue)
         dropped = drained = 0
         history = []
         new_state = state
         for ep in range(epochs):
             losses, server_params, opt_state, step, d = self._consume_epoch(
-                consumer, clients, queue, shares, steps_per_epoch
+                consumer, clients, queue, shares, steps_per_epoch, fleet
             )
             dropped += d["dropped"]
             drained += d["drained"]
@@ -511,10 +544,12 @@ class FusedQueueEngine(ProtocolEngine):
                  opt: Optimizer, *, mesh: Optional[Mesh] = None,
                  threaded: bool = False, client_batch: Optional[int] = None,
                  queue_size: int = 64, per_client_cap: Optional[int] = None,
+                 production: str = "fleet", fleet_chunk: int = 8,
                  unroll: int = 1):
         super().__init__(adapter, tc, opt, mesh=mesh, threaded=threaded,
                          client_batch=client_batch, queue_size=queue_size,
-                         per_client_cap=per_client_cap)
+                         per_client_cap=per_client_cap,
+                         production=production, fleet_chunk=fleet_chunk)
         self._run_bank = make_server_bank_runner(
             adapter, opt, tc.grad_clip, unroll=unroll
         )
@@ -523,15 +558,21 @@ class FusedQueueEngine(ProtocolEngine):
         self._server_params, self._opt_state = state["server"], state["opt"]
         return protocol_mod.BankedConsumer(queue, step_count=int(state["step"]))
 
-    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch):
+    def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch,
+                       fleet=None):
         """Bank one epoch of arrivals, then replay the bank as one scanned
         trunk dispatch — everything else (drive order, accounting, state
-        assembly) is inherited from ProtocolEngine, line for line."""
+        assembly) is inherited from ProtocolEngine, line for line. Fleet
+        production composes: arrivals enter the bank as ``FeatureSlice``
+        refs and ``FeatureBank.stacked`` gathers each production cycle's
+        run with one ``jnp.take``, so the whole epoch is a handful of
+        device ops end to end."""
         step_before = consumer.step_count
         consumer.bank = bank = FeatureBank(steps_per_epoch)
         d = protocol_mod.drive_protocol(
             clients, consumer, queue, shares,
             step_before + steps_per_epoch, threaded=self.threaded,
+            fleet=fleet,
         )
         self._server_params, self._opt_state, _, losses = self._run_bank(
             self._server_params, self._opt_state, step_before, *bank.stacked()
@@ -638,8 +679,8 @@ class SplitSession:
     **engine_options)`` — ``engine`` is a registry name (see
     ``available_engines()``) or a prebuilt ``Engine`` instance;
     ``engine_options`` go to the engine factory (e.g. ``threaded=``,
-    ``client_batch=`` for protocol-async; ``local_batch=`` for fedavg;
-    ``unroll=`` for the fused engines).
+    ``client_batch=``, ``production=`` for the queue engines;
+    ``local_batch=`` for fedavg; ``unroll=`` for the fused engines).
     """
 
     def __init__(self, adapter: SplitAdapter, config: SplitTrainConfig,

@@ -35,7 +35,11 @@ A wall-clock-faithful asynchronous queue simulation lives in
 and ``make_server_bank_runner`` is the bridge between the two: it replays a
 ``FeatureBank`` of queue arrivals (padded slots + validity mask) as ONE
 scanned sequence of server trunk updates, bit-identical to
-``protocol.SplitServer`` stepping once per pop.
+``protocol.SplitServer`` stepping once per pop. The production-side
+counterpart is ``protocol.FleetProducer``, which vmaps the fleet's client
+forwards + guard releases over the SAME stacked-bank layout this module
+owns — between them the queue engines' hot path is one client dispatch per
+queue cycle and one server dispatch per epoch.
 
 Role in the engine registry (``repro.core.session``): this module BUILDS the
 compiled programs behind ``auto`` / ``fused-scan`` / ``fused-stepwise``
@@ -566,7 +570,7 @@ def make_epoch_runner(
 
                 def step_noise(key):
                     cks = jax.random.split(key, tc.n_clients)
-                    gks = jax.vmap(guard.key_for)(cks)
+                    gks = guard.keys_for(cks)
                     return jax.vmap(
                         lambda k: jax.random.normal(k, feat.shape, jnp.float32)
                     )(gks)

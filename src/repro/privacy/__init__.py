@@ -27,6 +27,7 @@ from repro.privacy.guard import (
     DPConfig,
     GUARD_KEY_FOLD,
     PrivacyGuard,
+    batched_release_keys,
     clip_per_sample,
     dp_release,
     gaussian_release,
@@ -37,6 +38,7 @@ __all__ = [
     "DPConfig",
     "GUARD_KEY_FOLD",
     "PrivacyGuard",
+    "batched_release_keys",
     "budget_advance",
     "budget_init",
     "budget_report",

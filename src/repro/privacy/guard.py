@@ -43,6 +43,23 @@ from repro.kernels.dp_release.ops import dp_release_with_noise as _dp_release_op
 GUARD_KEY_FOLD = 7919
 
 
+def batched_release_keys(base_keys, releases):
+    """Per-item release keys from stacked per-client base keys, on device.
+
+    ``base_keys`` is ``[N]`` stacked PRNG keys (one per item, typically a
+    gather of the fleet's per-client base keys by item client id) and
+    ``releases`` the ``[N]`` int release counters; returns the ``[N]`` keys
+    ``fold_in(base_keys[i], releases[i])``. ``fold_in`` is counter-based
+    threefry, so the vmapped batch is BIT-IDENTICAL to folding each key on
+    the host one at a time — this is the key-schedule half of the fleet
+    production equivalence argument (``protocol.FleetProducer``): batching
+    the whole queue cycle's key derivations into the one jitted fleet
+    dispatch removes N tiny host dispatches without perturbing a single
+    noise draw.
+    """
+    return jax.vmap(jax.random.fold_in)(base_keys, releases)
+
+
 @dataclasses.dataclass(frozen=True)
 class DPConfig:
     """The privacy knob shared by every engine.
@@ -158,6 +175,13 @@ class PrivacyGuard:
         """Derive the guard's noise key from the client's per-step key, so
         the release draw never aliases the model-level noise draw."""
         return jax.random.fold_in(key, GUARD_KEY_FOLD)
+
+    def keys_for(self, keys):
+        """``key_for`` vmapped over stacked keys ``[N]`` — bit-identical to
+        deriving each key alone (fold_in is counter-based). Used by the
+        fused scan runner's epoch noise pre-draw and the fleet production
+        dispatch, where per-item host fold-ins would cost a dispatch each."""
+        return jax.vmap(self.key_for)(keys)
 
     def __call__(self, key, features: jnp.ndarray) -> jnp.ndarray:
         if self.dp is None:

@@ -1,0 +1,205 @@
+"""Fleet production for the queue engines: the whole client fleet's releases
+batched into one vmapped dispatch per queue cycle (``protocol.FleetProducer``)
+instead of one jitted dispatch per push. Pins the stage's contracts —
+per-item bit-exactness (σ=0 AND σ>0: history, losses, final canonical state,
+queue_stats), the cycle planner's lazy-production parity under queue
+overflow (drop/drain accounting AND the clients' RNG/release streams across
+epoch boundaries), the ``FeatureSlice`` zero-copy transport, and the
+per-client-cap fallback."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig
+from repro.core.adapters import mlp_adapter
+from repro.core.protocol import _plan_round_robin_cycle
+from repro.core.queue import FeatureBank, FeatureSlice
+from repro.data import make_cholesterol, split_clients
+from repro.optim import adamw
+from repro.privacy import DPConfig
+
+WEIGHTED = SplitTrainConfig(server_batch=48)  # the paper's 7:2:1
+QUEUE_ENGINES = ("protocol-async", "fused-queue")
+
+
+@pytest.fixture(scope="module")
+def chol_shards():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y), (x[:100], y[:100])
+
+
+def _fit(adapter, tc, shards, engine, production, *, epochs=2, steps=6,
+         seed=0, **kw):
+    session = SplitSession(adapter, tc, adamw(1e-2), engine=engine, seed=seed,
+                           threaded=False, production=production, **kw)
+    hist = session.fit(shards, epochs=epochs, steps_per_epoch=steps)
+    return session, hist
+
+
+def _assert_state_bitwise_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+def test_fleet_sigma0_bit_exact_vs_per_item(engine, chol_shards):
+    """The stage's core contract: batching the fleet's forwards changes
+    NOTHING but the dispatch count — history, per-step losses, final state
+    and accounting are bit-identical to the per-item PR 4 path, and a
+    second fit resumes both onto the same fresh stream."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sp, hist_p = _fit(ad, WEIGHTED, shards, engine, "per-item", epochs=3)
+    sf, hist_f = _fit(ad, WEIGHTED, shards, engine, "fleet", epochs=3)
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_f]
+    assert sp.engine.losses == sf.engine.losses
+    _assert_state_bitwise_equal(sp.state, sf.state)
+    assert sp.engine.stats == sf.engine.stats
+    h2p = sp.fit(shards, epochs=1, steps_per_epoch=6)
+    h2f = sf.fit(shards, epochs=1, steps_per_epoch=6)
+    assert [h["loss"] for h in h2p] == [h["loss"] for h in h2f]
+
+
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+def test_fleet_sigma_positive_shares_the_key_schedule(engine, chol_shards):
+    """σ>0: the batched fold-in key schedule (``batched_release_keys``
+    inside the one fleet dispatch) derives the exact keys the per-item path
+    folds on the host, so even the noised trajectories and the accountant's
+    worst-case release count match bit-for-bit."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    tc = dataclasses.replace(
+        WEIGHTED, privacy=DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    )
+    sp, hist_p = _fit(ad, tc, shards, engine, "per-item")
+    sf, hist_f = _fit(ad, tc, shards, engine, "fleet")
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_f]
+    _assert_state_bitwise_equal(sp.state, sf.state)
+    assert int(sf.state["privacy"]["releases"]) > 0
+    assert sp.privacy_report() == sf.privacy_report()
+
+
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+def test_full_queue_drop_drain_accounting_matches_per_item(engine, chol_shards):
+    """The satellite regression: a tiny queue forces drains every cycle and
+    a drop at each epoch's end — batched production must report IDENTICAL
+    ``{dropped, drained}`` (and pushed/popped/rejected) to the per-item
+    path. Runs THREE epochs so the cycle planner's lazy-production contract
+    is also exercised across epoch boundaries: over-producing by even one
+    item would desync the clients' sampling RNGs and ``releases`` counters
+    and show up in the next epoch's losses/state."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sp, hist_p = _fit(ad, WEIGHTED, shards, engine, "per-item", epochs=3,
+                      steps=6, queue_size=2)
+    sf, hist_f = _fit(ad, WEIGHTED, shards, engine, "fleet", epochs=3,
+                      steps=6, queue_size=2)
+    assert sf.engine.stats == sp.engine.stats
+    assert sf.engine.stats["dropped"] > 0
+    assert sf.engine.stats["drained"] > 0
+    assert sf.engine.stats["rejected"] > 0
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_f]
+    _assert_state_bitwise_equal(sp.state, sf.state)
+
+
+def test_two_engines_stay_bit_exact_under_fleet_production(chol_shards):
+    """PR 4's σ=0 contract holds with BOTH engines on fleet production (the
+    default): same arrival order, same accounting, same math."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sp, hist_p = _fit(ad, WEIGHTED, shards, "protocol-async", "fleet", epochs=3)
+    sq, hist_q = _fit(ad, WEIGHTED, shards, "fused-queue", "fleet", epochs=3)
+    assert [h["loss"] for h in hist_p] == [h["loss"] for h in hist_q]
+    assert sp.engine.losses == sq.engine.losses
+    _assert_state_bitwise_equal(sp.state, sq.state)
+    assert sp.engine.stats == sq.engine.stats
+
+
+def test_planner_reproduces_per_item_laziness():
+    """``_plan_round_robin_cycle`` against hand-walked per-item traces."""
+    # plenty of room: every client produces its full quantum, no drains
+    assert _plan_round_robin_cycle(0, 64, 0, 100, (7, 2, 1)) == [7, 2, 1]
+    # queue_size=2, fresh 6-step epoch: client 0 pushes 2 free + 5 drains
+    # (step hits 5); client 1 drains once more (step=6), then its second
+    # item jams and DROPS; client 2 breaks at the boundary, producing 0
+    assert _plan_round_robin_cycle(0, 2, 0, 6, (7, 2, 1)) == [7, 2, 0]
+    # target already reached at the cycle's first client boundary
+    assert _plan_round_robin_cycle(2, 2, 6, 6, (7, 2, 1)) == [0, 0, 0]
+    # the jam inside client 0's quantum: 2 free slots + 4 remaining steps =
+    # 6 pushes; the 7th item is produced, fails, drops — nobody else runs
+    assert _plan_round_robin_cycle(0, 2, 2, 6, (7, 2, 1)) == [7, 0, 0]
+    assert _plan_round_robin_cycle(0, 2, 3, 6, (7, 2, 1)) == [6, 0, 0]
+
+
+def test_fleet_threaded_chunks_production(chol_shards):
+    """Threaded drive with fleet production: each client thread produces
+    ``fleet_chunk`` releases per dispatch. Wall-clock nondeterminism rules
+    out bit-parity; the run must still hit the absolute step target with
+    finite losses and clean drop/drain accounting."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    session = SplitSession(ad, WEIGHTED, adamw(1e-2), engine="fused-queue",
+                           seed=0, threaded=True, fleet_chunk=4)
+    hist = session.fit(shards, epochs=2, steps_per_epoch=5)
+    assert int(session.state["step"]) == 10
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert session.engine.stats["dropped"] == session.engine.stats["drained"] == 0
+    # every produced batch is accounted: pushed >= popped == consumed steps
+    assert session.engine.stats["popped"] == 10
+
+
+def test_per_client_cap_falls_back_to_per_item(chol_shards):
+    """The cycle planner cannot see cap rejections, so a capped queue must
+    drive per-item even when production='fleet' — and land on the same
+    numbers as an explicit per-item run."""
+    shards, _ = chol_shards
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    sf, hist_f = _fit(ad, WEIGHTED, shards, "protocol-async", "fleet",
+                      epochs=1, steps=5, per_client_cap=2)
+    sp, hist_p = _fit(ad, WEIGHTED, shards, "protocol-async", "per-item",
+                      epochs=1, steps=5, per_client_cap=2)
+    assert [h["loss"] for h in hist_f] == [h["loss"] for h in hist_p]
+    assert sf.engine.stats == sp.engine.stats
+    _assert_state_bitwise_equal(sf.state, sp.state)
+
+
+def test_feature_slice_is_zero_copy_and_groups_in_bank():
+    """``FeatureSlice`` materializes one row via ``__jax_array__`` and
+    ``FeatureBank.stacked`` gathers same-parent runs with one take — both
+    bit-identical to materializing per item."""
+    parent = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 3))
+    other = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 3))
+    sl = FeatureSlice(parent, 2)
+    np.testing.assert_array_equal(np.asarray(jnp.asarray(sl)),
+                                  np.asarray(parent[2]))
+    assert sl.shape == (4, 3)
+
+    bank = FeatureBank(capacity=6)
+    items = [FeatureSlice(parent, 0), FeatureSlice(parent, 3),  # run 1
+             np.asarray(other[0]),                              # plain array
+             FeatureSlice(other, 1), FeatureSlice(parent, 4)]   # two runs
+    labels = np.arange(5 * 4, dtype=np.float32).reshape(5, 4)
+    for f, l in zip(items, labels):
+        bank.accept(0, f, l)
+    feats, labs, valid = bank.stacked()
+    want = np.stack([np.asarray(parent[0]), np.asarray(parent[3]),
+                     np.asarray(other[0]), np.asarray(other[1]),
+                     np.asarray(parent[4]),
+                     np.zeros((4, 3), np.float32)])
+    np.testing.assert_array_equal(np.asarray(feats), want)
+    np.testing.assert_array_equal(np.asarray(labs[:5]), labels)
+    assert valid.tolist() == [True] * 5 + [False]
+
+
+def test_bad_production_options_rejected(chol_shards):
+    with pytest.raises(ValueError, match="production"):
+        SplitSession(mlp_adapter(CHOLESTEROL_MLP), WEIGHTED, adamw(1e-2),
+                     engine="fused-queue", threaded=False, production="batch")
+    # a 0-item chunk would starve the threaded client loops forever
+    with pytest.raises(ValueError, match="fleet_chunk"):
+        SplitSession(mlp_adapter(CHOLESTEROL_MLP), WEIGHTED, adamw(1e-2),
+                     engine="protocol-async", threaded=True, fleet_chunk=0)

@@ -1,0 +1,105 @@
+"""Deprecation-shim coverage in one parametrized sweep: the retired modules
+(``core/dp.py``, ``core/inversion.py``) and the legacy ``SplitTrainConfig``
+fields must (1) warn with category ``DeprecationWarning`` exactly once,
+(2) carry a ``stacklevel`` that attributes the warning to the CALLER's file
+— a warning pointing at the shim itself is useless for migration — and
+(3) delegate to the replacement with nothing lost: identical objects for the
+re-export shims, an equal post-mapping config for the field shims."""
+import dataclasses
+import os
+import sys
+import warnings
+
+import pytest
+
+import repro.privacy as privacy
+import repro.privacy.accountant as accountant
+import repro.privacy.audit as audit
+import repro.privacy.guard as guard
+from repro.core.trainer import SplitTrainConfig
+
+
+def _fresh_import_dp():
+    # a real `import` statement, not importlib.reload: the stacklevel=2
+    # contract is about where the USER's import line lives (the warnings
+    # machinery skips importlib._bootstrap frames, but reload()'s own
+    # importlib/__init__.py frame would be counted and shift the blame)
+    sys.modules.pop("repro.core.dp", None)
+    import repro.core.dp as mod
+    return mod
+
+
+def _fresh_import_inversion():
+    sys.modules.pop("repro.core.inversion", None)
+    import repro.core.inversion as mod
+    return mod
+
+
+def _check_core_dp(mod):
+    assert mod.DPConfig is guard.DPConfig
+    assert mod.clip_per_sample is guard.clip_per_sample
+    assert mod.dp_release is guard.dp_release
+    assert mod.composed_epsilon is accountant.composed_epsilon
+
+
+def _check_core_inversion(mod):
+    assert mod.invert_features is audit.invert_features
+    assert mod.privacy_metrics is audit.privacy_metrics
+    assert mod.inversion_attack_report is audit.inversion_attack_report
+
+
+def _check_clip_norm(tc):
+    # the deprecated field was ALWAYS the gradient clip: it must land on
+    # grad_clip and be consumed, leaving a config equal to the modern one
+    assert tc == SplitTrainConfig(grad_clip=2.5)
+    assert tc.grad_clip == 2.5 and tc.clip_norm is None
+
+
+def _check_privacy_noise(tc):
+    # the legacy perturbation maps onto an UNCLIPPED guard bit-exactly
+    # (DPConfig(clip_norm=None) skips the clip — see test_privacy for the
+    # bit-parity of the release itself)
+    assert tc == SplitTrainConfig(
+        privacy=privacy.DPConfig(clip_norm=None, noise_scale=0.05)
+    )
+    assert tc.privacy_noise == 0.0
+
+
+SHIMS = [
+    ("core-dp-module", _fresh_import_dp,
+     "repro.core.dp is deprecated", _check_core_dp),
+    ("core-inversion-module", _fresh_import_inversion,
+     "repro.core.inversion is deprecated", _check_core_inversion),
+    ("config-clip-norm", lambda: SplitTrainConfig(clip_norm=2.5),
+     "clip_norm is deprecated", _check_clip_norm),
+    ("config-privacy-noise", lambda: SplitTrainConfig(privacy_noise=0.05),
+     "privacy_noise is deprecated", _check_privacy_noise),
+]
+
+
+@pytest.mark.parametrize("trigger,match,check",
+                         [case[1:] for case in SHIMS],
+                         ids=[case[0] for case in SHIMS])
+def test_deprecation_shim(trigger, match, check):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        result = trigger()
+    hits = [w for w in rec
+            if w.category is DeprecationWarning and match in str(w.message)]
+    assert len(hits) == 1, (match, [str(w.message) for w in rec])
+    # the stacklevel contract: the module shims warn at stacklevel=2 (the
+    # import statement; importlib's own frames don't count), the config
+    # shims at stacklevel=3 (through the generated dataclass __init__) —
+    # either way the warning must point HERE, at the caller
+    assert os.path.realpath(hits[0].filename) == os.path.realpath(__file__)
+    check(result)
+
+
+def test_field_shims_do_not_warn_on_modern_configs():
+    """The shim warning must never fire for code already on the new fields
+    — including dataclasses.replace over a migrated config."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        tc = SplitTrainConfig(grad_clip=2.0,
+                              privacy=privacy.DPConfig(noise_scale=0.1))
+        dataclasses.replace(tc, server_batch=32)

@@ -1,20 +1,29 @@
-"""Docs CI: link-check the markdown front door and smoke-run the README.
+"""Docs CI: link-check the markdown front door, run every Python example,
+and verify every cited steps/s number against the benchmark records.
 
-Two jobs, zero dependencies beyond the repo itself:
+Three jobs, zero dependencies beyond the repo itself:
 
   1. Every relative link in README.md, ROADMAP.md and docs/*.md must
      resolve — the target file exists, and if the link carries a
      ``#fragment`` the target (or same) file has a heading whose
      GitHub-style slug matches. External (http/mailto) links are skipped:
      CI must not flake on the internet.
-  2. The FIRST fenced ```python block in README.md (the quickstart) is
-     executed as-is in a scratch cwd with PYTHONPATH=src — the quickstart
-     is a promise to newcomers, so it is tested like one.
+  2. EVERY fenced ```python block in README.md and docs/*.md is executed
+     as-is, each in its own scratch cwd with PYTHONPATH=src — a code block
+     in the docs is a promise, so all of them are tested like one (blocks
+     that are deliberately not runnable — state-shape sketches, API
+     signatures — carry a ```text fence instead).
+  3. Every "<number> steps/s" citation in README.md and docs/*.md must
+     match a value recorded in ``BENCH_trainer.json`` / ``BENCH_kernels.json``
+     at the citation's own precision — the docs cannot quote throughput the
+     benchmarks don't back. (ROADMAP.md is exempt: it records the
+     historical trajectory across PRs, which the current JSONs replace.)
 
   PYTHONPATH=src python tools/check_docs.py
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import subprocess
@@ -26,6 +35,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+# a number immediately followed by a steps/s (or steps/sec) unit; prose like
+# "the protocol-async steps/s" has no adjacent number and is not a citation
+STEPS_RE = re.compile(r"(\d[\d,]*(?:\.\d+)?)\s*steps\s*/\s*s(?:ec)?\b")
+BENCH_FILES = ("BENCH_trainer.json", "BENCH_kernels.json")
 
 
 def doc_files():
@@ -35,6 +48,12 @@ def doc_files():
         os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
     )
     return [f for f in files if os.path.isfile(f)]
+
+
+def example_files():
+    """Files whose ```python blocks run and whose steps/s citations must be
+    backed by the BENCH records (ROADMAP carries history, so it is exempt)."""
+    return [f for f in doc_files() if os.path.basename(f) != "ROADMAP.md"]
 
 
 def github_slug(heading: str) -> str:
@@ -90,36 +109,95 @@ def check_links() -> list:
     return errors
 
 
-def run_quickstart() -> list:
-    readme = os.path.join(REPO, "README.md")
-    with open(readme, encoding="utf-8") as f:
-        blocks = FENCE_RE.findall(f.read())
-    if not blocks:
-        return ["README.md: no ```python quickstart block found"]
+def run_python_blocks() -> list:
+    """Execute every ```python block in README.md + docs/*.md."""
+    errors = []
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
-    with tempfile.TemporaryDirectory() as scratch:
-        proc = subprocess.run(
-            [sys.executable, "-c", blocks[0]],
-            cwd=scratch, env=env, capture_output=True, text=True, timeout=900,
-        )
-    if proc.returncode != 0:
-        return [
-            "README.md quickstart failed "
-            f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
-        ]
-    print("README quickstart output:")
-    print(proc.stdout.rstrip())
-    return []
+    total = 0
+    for path in example_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            blocks = FENCE_RE.findall(f.read())
+        if rel == "README.md" and not blocks:
+            errors.append("README.md: no ```python quickstart block found")
+        for i, block in enumerate(blocks):
+            total += 1
+            with tempfile.TemporaryDirectory() as scratch:
+                proc = subprocess.run(
+                    [sys.executable, "-c", block],
+                    cwd=scratch, env=env, capture_output=True, text=True,
+                    timeout=900,
+                )
+            if proc.returncode != 0:
+                errors.append(
+                    f"{rel}: python block #{i + 1} failed "
+                    f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+                )
+            else:
+                print(f"ran {rel} python block #{i + 1} ok")
+    print(f"executed {total} ```python blocks")
+    return errors
+
+
+def _bench_values() -> list:
+    """Every number recorded anywhere in the BENCH json files — top-level
+    floats AND numbers embedded in derived strings like
+    'steps_per_sec=871.3;speedup=4.3x'."""
+    values = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, list):
+            for v in node:
+                walk(v)
+        elif isinstance(node, bool):
+            pass
+        elif isinstance(node, (int, float)):
+            values.append(float(node))
+        elif isinstance(node, str):
+            for m in re.finditer(r"\d+(?:\.\d+)?", node):
+                values.append(float(m.group(0)))
+
+    for name in BENCH_FILES:
+        path = os.path.join(REPO, name)
+        if os.path.isfile(path):
+            with open(path, encoding="utf-8") as f:
+                walk(json.load(f))
+    return values
+
+
+def check_steps_citations() -> list:
+    """A cited "<number> steps/s" must equal some benchmark-recorded value
+    when that value is rounded to the citation's printed precision."""
+    bench = _bench_values()
+    errors = []
+    for path in example_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in STEPS_RE.finditer(text):
+            token = m.group(1).replace(",", "")
+            cited = float(token)
+            decimals = len(token.partition(".")[2])
+            if not any(round(v, decimals or None) == cited for v in bench):
+                errors.append(
+                    f"{rel}: cites {m.group(1)} steps/s, not found in "
+                    f"{' or '.join(BENCH_FILES)}"
+                )
+    return errors
 
 
 def main() -> int:
     errors = check_links()
     files = [os.path.relpath(p, REPO) for p in doc_files()]
     print(f"link-checked {len(files)} files: {', '.join(files)}")
-    errors += run_quickstart()
+    errors += check_steps_citations()
+    errors += run_python_blocks()
     if errors:
         print("\nDOCS CHECK FAILED:")
         for e in errors:
