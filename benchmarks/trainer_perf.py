@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import sys
 import time
 from typing import List, Tuple
 
@@ -54,6 +56,19 @@ import numpy as np
 Row = Tuple[str, float, str]
 
 BENCH_JSON = "BENCH_trainer.json"
+
+
+def _update_bench_json(updates: dict) -> None:
+    """Merge ``updates`` into BENCH_trainer.json IN PLACE: the full bench
+    and the degraded bench each own their keys, and re-running one must not
+    erase the other's recorded numbers (the docs cite both)."""
+    record = {}
+    if os.path.isfile(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            record = json.load(f)
+    record.update(updates)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2)
 
 
 # ------------------------------------------------- seed-frozen model graph
@@ -266,8 +281,7 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
         "queue_bridge_speedup": queue_bridge_speedup,
         "fleet_production_speedup": fleet_production_speedup,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(record, f, indent=2)
+    _update_bench_json(record)
     return [
         ("trainer/seed_loop_step", 1e6 / seed_sps, f"steps_per_sec={seed_sps:.1f}"),
         ("trainer/fused_step", 1e6 / fused_sps,
@@ -284,7 +298,104 @@ def bench_fused_vs_looped(steps: int = 100, reps: int = 5) -> List[Row]:
     ]
 
 
+def bench_degraded(steps: int = 100, reps: int = 5, epochs: int = 4) -> List[Row]:
+    """Degraded-mode rows: the robustness cost, measured instead of guessed.
+
+    The same demo config and protocol-async fleet drive as the main bench,
+    run twice through the fault-aware path: ``FaultPlan.none`` (0% dropout —
+    pinned bit-exact with the fault-free engines, so this row doubles as a
+    fault-machinery-overhead measurement) and rotating 30% dropout (every 20
+    server steps a fresh seeded subset of hospitals is down for 10, the
+    drive live-reweights the survivors). Two numbers per row:
+
+      * ``steps_per_sec`` — best-of-``reps`` epoch timing, like every other
+        trainer row. The epoch still targets the same server-step count;
+        down hospitals shift production onto survivors, so the delta is the
+        true throughput cost of degraded operation.
+      * ``final_loss`` — the last-epoch loss of one fixed deterministic run
+        (seed 0, ``epochs`` x ``steps``), showing convergence survives the
+        outage. Replayable bit-for-bit from the same seeds.
+
+    Updates the ``degraded`` block of BENCH_trainer.json IN PLACE — the main
+    bench rows are left untouched.
+
+      PYTHONPATH=src python -m benchmarks.trainer_perf --degraded
+    """
+    from repro.core.faults import FaultPlan
+    from repro.core.session import SplitSession
+    from repro.optim import adamw
+
+    cfg, adapter, tc, shards = _demo_setup()
+    plans = {
+        "dropout_0": FaultPlan.none(tc.n_clients),
+        "dropout_30": FaultPlan.dropout(tc.n_clients, 0.3, seed=7,
+                                        period=20, down_for=10),
+    }
+    timers = {}
+    for name, plan in plans.items():
+        session = SplitSession(adapter, tc, adamw(1e-3),
+                               engine="protocol-async", seed=0,
+                               threaded=False, production="fleet")
+        session.fit(shards, epochs=1, steps_per_epoch=steps,
+                    faults=plan)  # warmup/compile
+
+        def timed(session=session, plan=plan) -> float:
+            t0 = time.perf_counter()
+            session.fit(shards, epochs=1, steps_per_epoch=steps, faults=plan)
+            return time.perf_counter() - t0
+
+        timers[name] = timed
+    best = {name: 0.0 for name in timers}
+    order = list(timers)
+    for rep in range(reps):
+        for name in order[rep % len(order):] + order[: rep % len(order)]:
+            best[name] = max(best[name], steps / timers[name]())
+
+    # convergence under outage: one fixed deterministic run per plan
+    losses, down_cycles = {}, {}
+    for name, plan in plans.items():
+        session = SplitSession(adapter, tc, adamw(1e-3),
+                               engine="protocol-async", seed=0,
+                               threaded=False, production="fleet")
+        hist = session.fit(shards, epochs=epochs, steps_per_epoch=steps,
+                           faults=plan)
+        losses[name] = float(hist[-1]["loss"])
+        down_cycles[name] = int(sum(session.fault_stats["down_cycles"]))
+
+    sps0, sps30 = best["dropout_0"], best["dropout_30"]
+    cost_pct = (1.0 - sps30 / sps0) * 100.0
+    _update_bench_json({
+        "degraded": {
+            "config": {
+                "engine": "protocol-async, deterministic fleet drive",
+                "plan_30": "FaultPlan.dropout(8, 0.3, seed=7, period=20, down_for=10)",
+                "loss_run": f"{epochs} epochs x {steps} steps, seed 0",
+                "timing": f"best-of-{reps}",
+            },
+            "dropout_0": {
+                "steps_per_sec": sps0,
+                "final_loss": losses["dropout_0"],
+                "down_cycles": down_cycles["dropout_0"],
+            },
+            "dropout_30": {
+                "steps_per_sec": sps30,
+                "final_loss": losses["dropout_30"],
+                "down_cycles": down_cycles["dropout_30"],
+            },
+            "dropout_throughput_cost_pct": cost_pct,
+        }
+    })
+    return [
+        ("trainer/degraded_dropout_0", 1e6 / sps0,
+         f"steps_per_sec={sps0:.1f};final_loss={losses['dropout_0']:.4f}"),
+        ("trainer/degraded_dropout_30", 1e6 / sps30,
+         f"steps_per_sec={sps30:.1f};final_loss={losses['dropout_30']:.4f}"
+         f";throughput_cost={cost_pct:.1f}%"),
+    ]
+
+
 if __name__ == "__main__":
+    bench = bench_degraded if "--degraded" in sys.argv[1:] else bench_fused_vs_looped
     print("name,us_per_call,derived")
-    for name, us, derived in bench_fused_vs_looped():
+    for name, us, derived in bench():
         print(f"{name},{us:.1f},{derived}")

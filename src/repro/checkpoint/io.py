@@ -2,6 +2,12 @@
 
 The tree structure is flattened with '/'-joined key paths; each leaf is an
 array in the npz. Works for params, optimizer state and decode caches alike.
+
+Writes are crash-safe: both files land under temporary names and are moved
+into place with ``os.replace`` (atomic on POSIX), npz first, manifest last —
+so the manifest's existence marks a COMPLETE checkpoint and a process that
+dies mid-save (the fault drills checkpoint mid-fault on purpose) can never
+leave a half-written pair that ``latest_checkpoint`` would pick up.
 """
 from __future__ import annotations
 
@@ -28,7 +34,10 @@ def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dic
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **flat)
+    # the tmp name must keep the .npz suffix (np.savez appends one
+    # otherwise) while staying invisible to latest_checkpoint's pattern
+    tmp_npz = path.replace(".npz", ".tmp.npz")
+    np.savez(tmp_npz, **flat)
     treedef_repr = str(jax.tree_util.tree_structure(tree))
     manifest = {
         "step": step,
@@ -36,8 +45,13 @@ def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dic
         "treedef": treedef_repr,
         "metadata": metadata or {},
     }
-    with open(path.replace(".npz", ".json"), "w") as f:
+    json_path = path.replace(".npz", ".json")
+    tmp_json = json_path + ".tmp"
+    with open(tmp_json, "w") as f:
         json.dump(manifest, f, indent=2)
+    # npz first, manifest last: the manifest is the completeness marker
+    os.replace(tmp_npz, path)
+    os.replace(tmp_json, json_path)
     return path
 
 

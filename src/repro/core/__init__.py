@@ -6,6 +6,9 @@
 - queue:      the server-side feature/parameter queue (paper Fig. 1) and the
               FeatureBank that stages arrivals for the fused-queue engine
 - protocol:   explicit two-program client/server simulation (protocol fidelity)
+- faults:     deterministic fault injection (FaultPlan) for the queue engines
+              — crash/rejoin windows, stragglers, transport drop/dup,
+              imbalance skews, quorum halts — via `fit(..., faults=)`
 - trainer:    fused SPMD multi-client trainers for the paper's CNN/MLP models
 - distributed: multi-client split learning over the assigned LLM architectures
 - fedavg:     the federated-learning baseline the paper compares against
@@ -14,6 +17,7 @@ The privacy subsystem (PrivacyGuard at the cut, (ε, δ) accountant, the
 inversion audit) lives in ``repro.privacy``; ``core.dp`` and
 ``core.inversion`` are deprecated shims over it.
 """
+from repro.core.faults import ClientLoopError, FaultPlan
 from repro.core.queue import FeatureBank, FeatureQueue
 from repro.privacy.guard import DPConfig, PrivacyGuard
 from repro.core.trainer import (

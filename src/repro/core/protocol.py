@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapters import SplitAdapter
+from repro.core.faults import ClientLoopError, FaultRun
 from repro.core.queue import FeatureQueue, FeatureSlice
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.privacy.guard import PrivacyGuard, batched_release_keys
@@ -258,8 +259,15 @@ class SplitServer:
 
         self._step = _step
 
-    def train_one(self, timeout: float = 1.0) -> Optional[float]:
-        item = self.queue.pop(timeout=timeout)
+    def train_one(self, timeout: float = 1.0, retries: int = 0,
+                  backoff: float = 2.0) -> Optional[float]:
+        """One queue pop -> one trunk update. ``timeout`` is the pop wait;
+        on an empty-handed pop the consumer retries up to ``retries`` times
+        with exponentially backed-off waits (``timeout * backoff**k``, each
+        counted in ``FeatureQueue.stats()['retries']``) — the server-side
+        graceful degradation under stragglers/dropout. All three are engine
+        options (``pop_timeout`` / ``pop_retries`` / ``pop_backoff``)."""
+        item = _pop_with_backoff(self.queue, timeout, retries, backoff)
         if item is None:
             return None
         _cid, features, labels = item
@@ -289,10 +297,11 @@ class BankedConsumer:
         self.step_count = step_count
         self.bank = None  # the engine installs a fresh FeatureBank per epoch
 
-    def train_one(self, timeout: float = 1.0) -> Optional[float]:
+    def train_one(self, timeout: float = 1.0, retries: int = 0,
+                  backoff: float = 2.0) -> Optional[float]:
         if self.bank is None or self.bank.full:
             return None  # nowhere to put an item: leave it queued
-        item = self.queue.pop(timeout=timeout)
+        item = _pop_with_backoff(self.queue, timeout, retries, backoff)
         if item is None:
             return None
         self.bank.accept(*item)
@@ -300,9 +309,26 @@ class BankedConsumer:
         return None  # no loss yet — it materializes in the scanned epoch
 
 
+def _pop_with_backoff(queue: FeatureQueue, timeout: float, retries: int,
+                      backoff: float):
+    """Pop with exponential backoff: wait ``timeout``, then ``timeout *
+    backoff``, ``timeout * backoff**2``, … for up to ``retries`` re-pops.
+    Shared by both queue consumers so protocol-async and fused-queue count
+    identical ``timeouts``/``retries`` on identical drives."""
+    item = queue.pop(timeout=timeout)
+    wait = timeout
+    for _ in range(int(retries)):
+        if item is not None:
+            return item
+        wait *= backoff
+        queue.note_retry()
+        item = queue.pop(timeout=wait)
+    return item
+
+
 def _plan_round_robin_cycle(
     queue_len: int, queue_size: int, step: int, total: int,
-    quanta: Sequence[int],
+    quanta: Sequence[int], available: Optional[Sequence[bool]] = None,
 ) -> List[int]:
     """How many items each client PRODUCES in one round-robin cycle — the
     per-item drive's lazy production contract, restated as pure counting so
@@ -321,11 +347,22 @@ def _plan_round_robin_cycle(
     clients' sampling RNGs and ``releases`` counters past the per-item
     stream, breaking resume parity and the (ε, δ) accounting — pinned by
     ``tests/test_fleet_production.py``.
+
+    ``available`` (the fault subsystem's per-client up mask, ``None`` means
+    all up) removes DOWN clients from the cycle entirely: they produce
+    nothing, advance no RNG streams, and spend no budget — the cycle's
+    push/drain arithmetic simply skips them, exactly like the per-item
+    drive does. Never over-producing under arbitrary masks is pinned by the
+    Hypothesis property test in ``tests/test_faults.py``.
     """
     counts = [0] * len(quanta)
     for i, q in enumerate(int(x) for x in quanta):
         if step >= total:
             break
+        if available is not None and not available[i]:
+            continue
+        if q <= 0:
+            continue
         free = queue_size - queue_len
         capacity = free + (total - step)
         if q <= capacity:
@@ -338,6 +375,23 @@ def _plan_round_robin_cycle(
     return counts
 
 
+def _fault_halt_check(faults: FaultRun, queue: FeatureQueue, step: int) -> bool:
+    """The drive's quorum policy: halt cleanly (never spin) when too few
+    clients are up, or when the whole fleet is down over an empty queue —
+    crash windows are keyed on the server step, which cannot advance
+    without arrivals, so THAT stall is provably permanent."""
+    plan = faults.plan
+    up = sum(plan.up_mask(step))
+    if up < plan.halt_below:
+        faults.halt(f"quorum lost at step {step}: {up} up < "
+                    f"halt_below={plan.halt_below}")
+        return True
+    if up == 0 and len(queue) == 0:
+        faults.halt(f"all clients down at step {step} with an empty queue")
+        return True
+    return False
+
+
 def drive_protocol(
     clients: Sequence[SplitClient],
     server,
@@ -347,6 +401,10 @@ def drive_protocol(
     *,
     threaded: bool = True,
     fleet: Optional[FleetProducer] = None,
+    faults: Optional[FaultRun] = None,
+    pop_timeout: float = 1.0,
+    pop_retries: int = 0,
+    pop_backoff: float = 2.0,
 ) -> Dict[str, int]:
     """Drive prebuilt clients + a consumer until ``server.step_count``
     reaches ``total_server_steps`` (an ABSOLUTE target, so repeated calls
@@ -366,6 +424,30 @@ def drive_protocol(
     ``per_client_cap`` falls back to per-item production (the cap rejects
     pushes the planner cannot see).
 
+    With a :class:`~repro.core.faults.FaultRun` (``faults=``), the drive
+    injects the plan's failures deterministically: down clients are skipped
+    (no production, no RNG advance, no budget), surviving clients' quanta
+    are live-reweighted from their renormalized shares, stragglers produce
+    at reduced quanta (round-robin) or arrive late (threaded), and the
+    transport may drop or duplicate a release AFTER it left the privacy
+    layer. Transport faults make arrivals invisible to the cycle planner,
+    so they force per-item production, like ``per_client_cap``. The quorum
+    policy (:func:`_fault_halt_check`) halts the drive cleanly — reported
+    in the returned ``halted`` flag and the run's ``fault_stats`` — instead
+    of spinning on a queue nobody will ever fill. ``FaultPlan.none()``
+    takes these same branches and stays bit-exact with ``faults=None``.
+
+    ``pop_timeout``/``pop_retries``/``pop_backoff`` parameterize the
+    threaded consumer's ``train_one`` waits (exponential backoff between
+    re-pops; the deterministic drive pops with timeout 0 — queue state is
+    synchronous there, so waiting cannot help).
+
+    A threaded client loop that raises no longer dies silently (the drive
+    used to hang on join with a dead producer): the first exception stops
+    the drive and re-raises as :class:`~repro.core.faults.ClientLoopError`
+    with the original as ``__cause__``; the engines record it in
+    ``fault_stats["client_error"]``.
+
     Returns accounting for the engines' ``queue_stats``:
       * ``dropped`` — produced batches never enqueued (0 unless the run
         stops while the queue is full);
@@ -375,28 +457,50 @@ def drive_protocol(
         the consumer pops continuously). A drain is counted only when the
         consumer actually advanced — a ``train_one`` that consumes nothing
         (e.g. a cap-rejected push with nothing poppable) breaks out to the
-        drop accounting instead of spinning and inflating the count.
+        drop accounting instead of spinning and inflating the count;
+      * ``halted`` — True when the quorum policy stopped the drive short of
+        the step target.
     """
     dropped = drained = 0
     if threaded:
         stop = threading.Event()
+        errors: List[Tuple[int, BaseException]] = []
 
         def client_loop(client: SplitClient, share: float):
             pending: collections.deque = collections.deque()
-            while not stop.is_set():
-                if not pending:
-                    # one dispatch per chunk of releases (or per item when
-                    # driving without a fleet)
-                    if fleet is not None:
-                        pending = fleet.produce_for(client, fleet.chunk)
-                    else:
-                        f, l = client.produce()
-                        pending.append((client.client_id, f, l))
-                cid, f, l = pending.popleft()
-                while not queue.push(cid, f, l) and not stop.is_set():
-                    time.sleep(0.001)  # backpressure
-                # arrival rate ∝ data share (bigger hospitals push more often)
-                time.sleep(max(0.0005, 0.002 * (1 - share)))
+            try:
+                while not stop.is_set():
+                    if faults is not None and not faults.plan.available(
+                        client.client_id, server.step_count
+                    ):
+                        pending.clear()  # a crash loses its in-flight items
+                        time.sleep(0.002)  # (their budget is already spent)
+                        continue
+                    if not pending:
+                        # one dispatch per chunk of releases (or per item
+                        # when driving without a fleet)
+                        if fleet is not None:
+                            pending = fleet.produce_for(client, fleet.chunk)
+                        else:
+                            f, l = client.produce()
+                            pending.append((client.client_id, f, l))
+                    cid, f, l = pending.popleft()
+                    copies = 1
+                    if faults is not None:
+                        fate = faults.transit(cid)
+                        copies = {"ok": 1, "dup": 2, "drop": 0}[fate]
+                    for _ in range(copies):
+                        while not queue.push(cid, f, l) and not stop.is_set():
+                            time.sleep(0.001)  # backpressure
+                    # arrival rate ∝ data share (bigger hospitals push more
+                    # often); stragglers arrive late, not never
+                    sleep = max(0.0005, 0.002 * (1 - share))
+                    if faults is not None:
+                        sleep = faults.plan.straggler_sleep(client.client_id, sleep)
+                    time.sleep(sleep)
+            except Exception as e:
+                errors.append((client.client_id, e))
+                stop.set()  # a dead producer must stop the drive, not hang it
 
         threads = [
             threading.Thread(target=client_loop, args=(c, s), daemon=True)
@@ -405,23 +509,52 @@ def drive_protocol(
         for t in threads:
             t.start()
         while server.step_count < total_server_steps:
-            server.train_one(timeout=1.0)
+            if errors:
+                break
+            if faults is not None and _fault_halt_check(
+                faults, queue, server.step_count
+            ):
+                break
+            server.train_one(timeout=pop_timeout, retries=pop_retries,
+                             backoff=pop_backoff)
         stop.set()
         for t in threads:
             t.join(timeout=2.0)
+        if errors:
+            cid, exc = errors[0]
+            raise ClientLoopError(cid, exc) from exc
     else:  # deterministic round-robin (rate ∝ share)
-        quanta = np.maximum(1, np.round(np.asarray(shares) * 10).astype(int))
-        plan_cycles = fleet is not None and queue.per_client_cap is None
+        base_quanta = np.maximum(1, np.round(np.asarray(shares) * 10).astype(int))
+        plan_cycles = (fleet is not None and queue.per_client_cap is None
+                       and (faults is None or not faults.plan.has_transport_faults))
+        stalled_cycles = 0
         while server.step_count < total_server_steps:
+            if faults is not None:
+                if _fault_halt_check(faults, queue, server.step_count):
+                    break
+                if stalled_cycles >= 1000:
+                    # e.g. drop_prob ~ 1.0: production spins, nothing ever
+                    # arrives, the step target is unreachable — stop
+                    # spending budget on a queue that will never fill
+                    faults.halt(f"no progress for {stalled_cycles} cycles "
+                                f"at step {server.step_count}")
+                    break
+                step_before, pushed_before = server.step_count, queue.pushed
+                quanta, up = faults.plan.cycle_quanta(server.step_count, shares)
+                faults.note_cycle(up)
+            else:
+                quanta, up = base_quanta, None
             pending = None
             if plan_cycles:
                 pending = fleet.produce(_plan_round_robin_cycle(
                     len(queue), queue.max_size, server.step_count,
-                    total_server_steps, quanta,
+                    total_server_steps, quanta, available=up,
                 ))
-            for c, q in zip(clients, quanta):
+            for i, (c, q) in enumerate(zip(clients, quanta)):
                 if server.step_count >= total_server_steps:
                     break
+                if up is not None and not up[i]:
+                    continue  # down: no production, no RNG advance, no budget
                 for _ in range(int(q)):
                     if pending is not None:
                         if not pending:  # planner: never produced per-item
@@ -430,23 +563,40 @@ def drive_protocol(
                     else:
                         f, l = c.produce()
                         cid = c.client_id
-                    # a full queue DRAINS the consumer instead of dropping
-                    # the batch (the seed ignored push()'s return value here,
-                    # so rejected items silently vanished)
-                    pushed = queue.push(cid, f, l)
-                    while not pushed and server.step_count < total_server_steps:
-                        before = server.step_count
-                        server.train_one(timeout=0.0)
-                        if server.step_count == before:
-                            break  # consumer can't make room: fall through
-                        drained += 1
+                    copies = 1
+                    if faults is not None and faults.plan.has_transport_faults:
+                        fate = faults.transit(cid)
+                        if fate == "drop":
+                            continue  # lost in transit; budget already spent
+                        copies = 2 if fate == "dup" else 1
+                    jammed = False
+                    for _ in range(copies):
+                        # a full queue DRAINS the consumer instead of
+                        # dropping the batch (the seed ignored push()'s
+                        # return value here, so rejected items silently
+                        # vanished)
                         pushed = queue.push(cid, f, l)
-                    if not pushed:  # target reached with the queue still full
-                        dropped += 1
+                        while not pushed and server.step_count < total_server_steps:
+                            before = server.step_count
+                            server.train_one(timeout=0.0)
+                            if server.step_count == before:
+                                break  # consumer can't make room: fall through
+                            drained += 1
+                            pushed = queue.push(cid, f, l)
+                        if not pushed:  # target reached, queue still full
+                            dropped += 1
+                            jammed = True
+                            break
+                    if jammed:
                         break
             while len(queue) and server.step_count < total_server_steps:
                 server.train_one(timeout=0.0)
-    return {"dropped": dropped, "drained": drained}
+            if faults is not None:
+                made_progress = (server.step_count != step_before
+                                 or queue.pushed != pushed_before)
+                stalled_cycles = 0 if made_progress else stalled_cycles + 1
+    return {"dropped": dropped, "drained": drained,
+            "halted": faults.halted if faults is not None else False}
 
 
 def run_protocol(

@@ -72,6 +72,8 @@ class FeatureQueue:
         self.pushed = 0
         self.popped = 0
         self.rejected = 0
+        self.timeouts = 0
+        self.retries = 0
 
     @property
     def max_size(self) -> int:
@@ -100,15 +102,25 @@ class FeatureQueue:
             return True
 
     def pop(self, timeout: Optional[float] = None):
+        """Pop one item, waiting up to ``timeout`` seconds for an arrival.
+        An empty-handed return counts as a ``timeout`` in :meth:`stats` —
+        the server-side starvation signal the degraded-mode drive watches."""
         with self._not_empty:
             if not self._q and timeout is not None:
                 self._not_empty.wait(timeout)
             if not self._q:
+                self.timeouts += 1
                 return None
             client_id, f, l = self._q.popleft()
             self._per_client_counts[client_id] -= 1
             self.popped += 1
             return client_id, f, l
+
+    def note_retry(self) -> None:
+        """Record one consumer retry (a backed-off re-pop after a timeout);
+        cumulative in :meth:`stats` next to ``timeouts``."""
+        with self._lock:
+            self.retries += 1
 
     def pop_many(self, n: int) -> List[Tuple[Any, Any, Any]]:
         out = []
@@ -125,7 +137,9 @@ class FeatureQueue:
             return len(self._q)
 
     def stats(self) -> Dict[str, int]:
-        return {"pushed": self.pushed, "popped": self.popped, "rejected": self.rejected}
+        return {"pushed": self.pushed, "popped": self.popped,
+                "rejected": self.rejected, "timeouts": self.timeouts,
+                "retries": self.retries}
 
 
 class FeatureBank:

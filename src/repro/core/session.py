@@ -61,6 +61,7 @@ from repro.checkpoint.io import load_checkpoint, save_checkpoint
 from repro.core import fedavg as fedavg_mod
 from repro.core import protocol as protocol_mod
 from repro.core.adapters import SplitAdapter
+from repro.core.faults import ClientLoopError, FaultPlan
 from repro.core.queue import FeatureBank, FeatureQueue
 from repro.core.trainer import (
     CLIENT_AXIS,
@@ -70,6 +71,7 @@ from repro.core.trainer import (
     client_weights,
     device_put_shards,
     evaluate_per_client,
+    finite_mean,
     fused_client_batch,
     make_epoch_runner,
     make_looped_step,
@@ -80,7 +82,12 @@ from repro.core.trainer import (
     unstack_pytree,
 )
 from repro.optim.optimizers import Optimizer
-from repro.privacy.accountant import budget_advance, budget_init, budget_report
+from repro.privacy.accountant import (
+    budget_advance,
+    budget_init,
+    budget_report,
+    per_client_report,
+)
 from repro.privacy.audit import guard_noise_sweep
 from repro.privacy.guard import PrivacyGuard
 
@@ -324,7 +331,9 @@ class ProtocolEngine:
                  opt: Optimizer, *, mesh: Optional[Mesh] = None,
                  threaded: bool = False, client_batch: Optional[int] = None,
                  queue_size: int = 64, per_client_cap: Optional[int] = None,
-                 production: str = "fleet", fleet_chunk: int = 8):
+                 production: str = "fleet", fleet_chunk: int = 8,
+                 pop_timeout: float = 1.0, pop_retries: int = 0,
+                 pop_backoff: float = 2.0):
         if mesh is not None:
             raise ValueError(
                 f"{self.name} does not support mesh=; use a fused engine"
@@ -343,10 +352,21 @@ class ProtocolEngine:
             # (empty production deque -> dead producer threads -> the drive
             # spins on an empty queue); fail loud at construction instead
             raise ValueError(f"fleet_chunk must be >= 1, got {fleet_chunk}")
+        if pop_timeout < 0:
+            raise ValueError(f"pop_timeout must be >= 0, got {pop_timeout}")
+        if pop_retries < 0:
+            raise ValueError(f"pop_retries must be >= 0, got {pop_retries}")
+        if pop_backoff < 1.0:
+            # a shrinking backoff would busy-wait the starved consumer
+            raise ValueError(f"pop_backoff must be >= 1.0, got {pop_backoff}")
         self.adapter, self.tc, self.opt = adapter, tc, opt
         self.threaded = threaded
         self.client_batch = client_batch or fused_client_batch(tc)
         self.queue_size, self.per_client_cap = queue_size, per_client_cap
+        # the threaded consumer's pop wait + exponential-backoff retries
+        # (server-side graceful degradation under stragglers/dropout)
+        self.pop_timeout, self.pop_retries = pop_timeout, pop_retries
+        self.pop_backoff = pop_backoff
         # production="fleet" (default): one vmapped release dispatch per
         # queue cycle over the stacked client banks, bit-identical per item
         # to "per-item" (one jitted dispatch per push — the PR 4 path, kept
@@ -361,6 +381,7 @@ class ProtocolEngine:
         self._fleet_fwd = protocol_mod.make_fleet_release_fwd(adapter, self.guard)
         self.losses: List[float] = []
         self.stats: Dict[str, Any] = {}
+        self.fault_stats: Dict[str, Any] = {}
 
     def init(self, key):
         self._noise_seed = _seed_from_key(key)
@@ -398,6 +419,9 @@ class ProtocolEngine:
     # clients keep host-NumPy releases here (the per-pop server step consumes
     # them from the host anyway); the fused-queue subclass flips this off
     _client_as_numpy = True
+    # the queue engines accept fit(..., faults=FaultPlan): failures are a
+    # property of the multi-site transport, which only these engines model
+    supports_faults = True
 
     def _make_clients(self, state, shards):
         """The fleet, seeded from the consumed server step so a second fit
@@ -434,22 +458,56 @@ class ProtocolEngine:
         )
 
     def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch,
-                       fleet=None):
+                       fleet=None, faults=None):
         """Drive one epoch through ``drive_protocol`` and return
         ``(losses, server_params, opt_state, step, drive_stats)``. Every
         line of bookkeeping AROUND this hook is shared with the fused-queue
         subclass — keeping the two engines' accounting in lockstep is what
         the σ=0 bit-parity contract rests on."""
+        n_before = len(consumer.losses)
         d = protocol_mod.drive_protocol(
             clients, consumer, queue, shares,
             consumer.step_count + steps_per_epoch, threaded=self.threaded,
-            fleet=fleet,
+            fleet=fleet, faults=faults, pop_timeout=self.pop_timeout,
+            pop_retries=self.pop_retries, pop_backoff=self.pop_backoff,
         )
-        return (consumer.losses[-steps_per_epoch:], consumer.params,
+        # slice by the count BEFORE the drive, not -steps_per_epoch: a
+        # quorum halt can end an epoch short, and a fixed tail slice would
+        # then reach back into the previous epoch's losses
+        return (consumer.losses[n_before:], consumer.params,
                 consumer.opt_state, consumer.step_count, d)
 
-    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+    def _assemble_fault_stats(self, frun, clients, error=None):
+        """The ``fault_stats`` report beside ``queue_stats``: the plan, the
+        halt state, per-client fault counters, per-client releases actually
+        produced (a down hospital's counter holds still), and — when the
+        guard is on — each hospital's own (ε, δ) spend this run."""
+        fs: Dict[str, Any] = {
+            "plan": None, "halted": False, "halt_reason": None,
+            "client_error": None,
+        }
+        if frun is not None:
+            fs.update(frun.stats())
+        if clients is not None:
+            produced = [int(c.releases) for c in clients]
+            fs["releases_per_client"] = produced
+            if self.guard.enabled:
+                fs["per_client_privacy"] = per_client_report(
+                    self.tc.privacy, produced
+                )
+        if error is not None:
+            fs["client_error"] = repr(error.cause)
+            fs["client_error_id"] = error.client_id
+        return fs
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None,
+            faults: Optional[FaultPlan] = None):
         assert len(shards) == self.tc.n_clients
+        if faults is not None and faults.n_clients != self.tc.n_clients:
+            raise ValueError(
+                f"FaultPlan covers {faults.n_clients} clients but the config "
+                f"has n_clients={self.tc.n_clients}"
+            )
         shares = np.asarray(self.tc.data_shares, np.float64)
         shares = (shares / shares.sum()).tolist()
         queue = FeatureQueue(max_size=self.queue_size,
@@ -457,36 +515,60 @@ class ProtocolEngine:
         clients = self._make_clients(state, shards)
         fleet = self._make_fleet(clients)
         consumer = self._make_consumer(state, queue)
+        # one FaultRun spans the whole run: its transport streams are keyed
+        # on (plan seed, the canonical step at fit time, client), so a
+        # restored-mid-fault session draws the same stream a continued one
+        # does — and the schedule itself is keyed on the server step, which
+        # rides in the canonical state
+        frun = faults.start_run(int(state["step"])) if faults is not None else None
         dropped = drained = 0
         history = []
         new_state = state
-        for ep in range(epochs):
-            losses, server_params, opt_state, step, d = self._consume_epoch(
-                consumer, clients, queue, shares, steps_per_epoch, fleet
-            )
-            dropped += d["dropped"]
-            drained += d["drained"]
-            self.losses.extend(losses)
-            rec = {"epoch": ep, "loss": float(np.mean(losses)),
-                   "server_steps": step}
-            # per-client budget: the WORST-CASE client's release count this
-            # run (every produced batch left the privacy layer, whether or
-            # not the queue accepted it)
-            released = max(c.releases for c in clients)
-            new_state = {
-                "client_banks": [c.params for c in clients],
-                "server": server_params,
-                "opt": opt_state,
-                "step": step,
-                "privacy": budget_advance(state["privacy"], self.tc.privacy, released)
-                if self.guard.enabled else state["privacy"],
-            }
-            if eval_fn is not None:
-                rec.update({f"val_{k}": v
-                            for k, v in eval_fn(self.to_canonical(new_state)).items()})
-            history.append(rec)
+        try:
+            for ep in range(epochs):
+                losses, server_params, opt_state, step, d = self._consume_epoch(
+                    consumer, clients, queue, shares, steps_per_epoch, fleet,
+                    frun,
+                )
+                dropped += d["dropped"]
+                drained += d["drained"]
+                self.losses.extend(losses)
+                rec = {"epoch": ep, "loss": finite_mean(losses),
+                       "server_steps": step}
+                # per-client budget: the WORST-CASE client's release count
+                # this run (every produced batch left the privacy layer,
+                # whether or not the queue accepted or transported it; a
+                # DOWN client's counter holds still, so a crashed hospital
+                # spends no budget while out)
+                released = max(c.releases for c in clients)
+                new_state = {
+                    "client_banks": [c.params for c in clients],
+                    "server": server_params,
+                    "opt": opt_state,
+                    "step": step,
+                    "privacy": budget_advance(state["privacy"], self.tc.privacy, released)
+                    if self.guard.enabled else state["privacy"],
+                }
+                if eval_fn is not None:
+                    rec.update({f"val_{k}": v
+                                for k, v in eval_fn(self.to_canonical(new_state)).items()})
+                if d.get("halted"):
+                    rec["halted"] = True
+                    history.append(rec)
+                    break  # the quorum policy ended the run cleanly
+                history.append(rec)
+        except ClientLoopError as e:
+            # a client thread died: surface the exception but leave the
+            # audit trail (stats + fault_stats) in place for the caller
+            self.fault_stats = self._assemble_fault_stats(frun, clients, e)
+            self.stats = {**queue.stats(), "dropped": dropped,
+                          "drained": drained,
+                          "privacy": budget_report(self.tc.privacy,
+                                                   new_state["privacy"])}
+            raise
         self.stats = {**queue.stats(), "dropped": dropped, "drained": drained,
                       "privacy": budget_report(self.tc.privacy, new_state["privacy"])}
+        self.fault_stats = self._assemble_fault_stats(frun, clients)
         return new_state, history
 
     def to_canonical(self, state):
@@ -545,11 +627,14 @@ class FusedQueueEngine(ProtocolEngine):
                  threaded: bool = False, client_batch: Optional[int] = None,
                  queue_size: int = 64, per_client_cap: Optional[int] = None,
                  production: str = "fleet", fleet_chunk: int = 8,
-                 unroll: int = 1):
+                 pop_timeout: float = 1.0, pop_retries: int = 0,
+                 pop_backoff: float = 2.0, unroll: int = 1):
         super().__init__(adapter, tc, opt, mesh=mesh, threaded=threaded,
                          client_batch=client_batch, queue_size=queue_size,
                          per_client_cap=per_client_cap,
-                         production=production, fleet_chunk=fleet_chunk)
+                         production=production, fleet_chunk=fleet_chunk,
+                         pop_timeout=pop_timeout, pop_retries=pop_retries,
+                         pop_backoff=pop_backoff)
         self._run_bank = make_server_bank_runner(
             adapter, opt, tc.grad_clip, unroll=unroll
         )
@@ -559,7 +644,7 @@ class FusedQueueEngine(ProtocolEngine):
         return protocol_mod.BankedConsumer(queue, step_count=int(state["step"]))
 
     def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch,
-                       fleet=None):
+                       fleet=None, faults=None):
         """Bank one epoch of arrivals, then replay the bank as one scanned
         trunk dispatch — everything else (drive order, accounting, state
         assembly) is inherited from ProtocolEngine, line for line. Fleet
@@ -572,8 +657,13 @@ class FusedQueueEngine(ProtocolEngine):
         d = protocol_mod.drive_protocol(
             clients, consumer, queue, shares,
             step_before + steps_per_epoch, threaded=self.threaded,
-            fleet=fleet,
+            fleet=fleet, faults=faults, pop_timeout=self.pop_timeout,
+            pop_retries=self.pop_retries, pop_backoff=self.pop_backoff,
         )
+        if len(bank) == 0:
+            # a quorum halt (or an all-down window) can end an epoch before
+            # a single item arrived; an empty bank has nothing to replay
+            return [], self._server_params, self._opt_state, consumer.step_count, d
         self._server_params, self._opt_state, _, losses = self._run_bank(
             self._server_params, self._opt_state, step_before, *bank.stacked()
         )
@@ -707,11 +797,15 @@ class SplitSession:
         self.history: List[Dict[str, float]] = []
 
     def fit(self, shards: Shards, *, epochs: int, steps_per_epoch: int,
-            eval_fn: EvalFn = None) -> List[Dict[str, float]]:
+            eval_fn: EvalFn = None,
+            faults: Optional[FaultPlan] = None) -> List[Dict[str, float]]:
         """Train for ``epochs x steps_per_epoch`` engine-native units and
         return this call's history (also appended to ``self.history``).
         ``eval_fn``, if given, receives the CANONICAL state after each epoch
-        and its dict is merged into the record under ``val_`` keys."""
+        and its dict is merged into the record under ``val_`` keys.
+        ``faults``, if given, injects a deterministic :class:`FaultPlan`
+        (crash windows, stragglers, transport faults, share skew) into the
+        drive — queue engines only — and fills ``self.fault_stats``."""
         assert len(shards) == self.config.n_clients, (
             f"{len(shards)} shards for n_clients={self.config.n_clients}"
         )
@@ -719,12 +813,28 @@ class SplitSession:
             # uniform across engines: a zero-step epoch would diverge per
             # regime (empty bank vs empty loss slice) instead of failing loud
             raise ValueError(f"steps_per_epoch must be >= 1, got {steps_per_epoch}")
+        kwargs: Dict[str, Any] = {}
+        if faults is not None:
+            if not getattr(self.engine, "supports_faults", False):
+                raise ValueError(
+                    f"engine {self.engine.name!r} does not support faults=; "
+                    "fault injection models the multi-site transport, which "
+                    "only the queue engines (protocol-async, fused-queue) have"
+                )
+            kwargs["faults"] = faults
         self._native, history = self.engine.run(
             self._native, shards, epochs=epochs, steps_per_epoch=steps_per_epoch,
-            eval_fn=eval_fn,
+            eval_fn=eval_fn, **kwargs,
         )
         self.history.extend(history)
         return history
+
+    @property
+    def fault_stats(self) -> Dict[str, Any]:
+        """The last fit's fault report (plan, halt state, per-client
+        releases/budget, transport counters) — ``{}`` for engines that never
+        saw a ``faults=`` plan."""
+        return getattr(self.engine, "fault_stats", {})
 
     @property
     def state(self):

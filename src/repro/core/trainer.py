@@ -178,6 +178,17 @@ def stack_batches(
     return xs, ys
 
 
+def finite_mean(values) -> float:
+    """Mean over the FINITE entries of ``values``; NaN when there are none.
+    Identical to a plain mean on all-finite input (the values pass through
+    untouched), but degraded-mode epochs — fault drills with quorum halts or
+    all-down windows (``core.faults``) — can report empty or NaN-masked loss
+    lists, and a plain mean would propagate the padding into the history."""
+    arr = np.asarray(values, np.float64)
+    arr = arr[np.isfinite(arr)]
+    return float(arr.mean()) if arr.size else float("nan")
+
+
 # --------------------------------------------------------------------- steps
 def _shard_banked_forward(fwd_banked, mesh: Mesh, client_axis: str):
     """shard_map the vmapped privacy layer over the mesh's client axis: each

@@ -75,6 +75,22 @@ def composed_epsilon(dp: DPConfig, releases: int, delta_prime: float = 1e-6) -> 
     }
 
 
+def per_client_report(dp: Optional[DPConfig], releases_per_client,
+                      delta_prime: float = 1e-6) -> list:
+    """Per-hospital budget breakdown from ACTUAL release counts.
+
+    The carried budget tracks the worst-case client; under client dropout
+    the counts diverge — a hospital that was down produced nothing and
+    spent nothing. ``releases_per_client`` is the list of each client's own
+    release counter (``SplitClient.releases``); the i-th entry of the
+    result is that client's ``composed_epsilon`` summary. Empty list when
+    the guard is disabled."""
+    if dp is None:
+        return []
+    return [composed_epsilon(dp, int(t), delta_prime)
+            for t in releases_per_client]
+
+
 def budget_report(dp: Optional[DPConfig], budget: Budget,
                   delta_prime: float = 1e-6) -> dict:
     """Human-readable budget: the carried counters + both composition bounds.

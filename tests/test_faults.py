@@ -1,0 +1,394 @@
+"""The fault subsystem (``core.faults``): deterministic chaos injection for
+the queue engines. Pins the PR's acceptance contracts —
+
+  * ``FaultPlan.none()`` is BIT-EXACT with ``faults=None`` (history, final
+    canonical state, queue_stats) at σ=0 and σ>0, for both productions;
+  * a seeded 30%-dropout + straggler chaos run completes without hang,
+    converges, replays identically from the same seed, resumes through a
+    mid-fault save/restore, and its accountant release count equals the
+    actually-produced releases (a down hospital spends no budget);
+  * the ``halt_below`` quorum policy halts cleanly instead of spinning;
+  * a threaded client loop that raises surfaces as ``ClientLoopError``;
+  * the pop timeout/retry/backoff engine options and the queue's
+    ``timeouts``/``retries`` counters;
+  * the Hypothesis property: ``_plan_round_robin_cycle`` matches the
+    per-item drive exactly (never over-produces) under randomized quanta,
+    capacities, occupancy, and per-client availability masks.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import (
+    ClientLoopError,
+    FaultPlan,
+    FeatureQueue,
+    SplitSession,
+    SplitTrainConfig,
+)
+from repro.core.adapters import mlp_adapter
+from repro.core.protocol import _plan_round_robin_cycle
+from repro.data import make_cholesterol, split_clients
+from repro.optim import adamw
+from repro.privacy import DPConfig
+from repro.privacy.accountant import composed_epsilon, per_client_report
+
+WEIGHTED = SplitTrainConfig(server_batch=48)  # the paper's 7:2:1
+WEIGHTED_DP = dataclasses.replace(
+    WEIGHTED, privacy=DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+)
+QUEUE_ENGINES = ("protocol-async", "fused-queue")
+
+# the acceptance chaos plan: rotating 30% dropout + a 2x straggler
+CHAOS = FaultPlan.dropout(3, 0.3, seed=7, period=10, down_for=5,
+                          straggle={1: 2.0})
+
+
+@pytest.fixture(scope="module")
+def chol_shards():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y)
+
+
+def _fit(adapter, tc, shards, engine, production, *, epochs=2, steps=6,
+         seed=0, faults=None, **kw):
+    session = SplitSession(adapter, tc, adamw(1e-2), engine=engine, seed=seed,
+                           threaded=False, production=production, **kw)
+    hist = session.fit(shards, epochs=epochs, steps_per_epoch=steps,
+                       faults=faults)
+    return session, hist
+
+
+def _assert_state_bitwise_equal(sa, sb):
+    la, lb = jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- none-plan bit-exactness
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+@pytest.mark.parametrize("production", ("fleet", "per-item"))
+@pytest.mark.parametrize("tc", (WEIGHTED, WEIGHTED_DP), ids=("sigma0", "dp"))
+def test_none_plan_bit_exact(chol_shards, engine, production, tc):
+    """FaultPlan.none() routes through the fault-aware drive branches and
+    must change NOTHING: history, final canonical state and queue stats are
+    bit-identical to faults=None — at σ=0 and with the guard on."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    s0, h0 = _fit(adapter, tc, chol_shards, engine, production)
+    s1, h1 = _fit(adapter, tc, chol_shards, engine, production,
+                  faults=FaultPlan.none(3))
+    assert h0 == h1
+    _assert_state_bitwise_equal(s0.state, s1.state)
+    assert s0.engine.stats == s1.engine.stats
+    assert s1.fault_stats["halted"] is False
+    assert len(s1.fault_stats["releases_per_client"]) == 3
+    assert max(s1.fault_stats["releases_per_client"]) > 0
+
+
+# ----------------------------------------------------------- the chaos run
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+def test_chaos_run_replays_and_accounts(chol_shards, engine):
+    """The acceptance chaos drill: 30% rotating dropout + a straggler.
+    Completes (no hang), replays bit-identically from the same seed, and
+    the accountant's release count equals the worst-case ACTUALLY produced
+    count — down hospitals spent nothing."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    s1, h1 = _fit(adapter, WEIGHTED_DP, chol_shards, engine, "fleet",
+                  epochs=3, steps=10, faults=CHAOS)
+    s2, h2 = _fit(adapter, WEIGHTED_DP, chol_shards, engine, "fleet",
+                  epochs=3, steps=10, faults=CHAOS)
+    assert h1 == h2
+    _assert_state_bitwise_equal(s1.state, s2.state)
+    fs = s1.fault_stats
+    produced = fs["releases_per_client"]
+    assert s1.privacy_report()["releases"] == max(produced)
+    # somebody was actually down at some point, and the down clients
+    # produced less than the healthy ones
+    assert sum(fs["down_cycles"]) > 0
+    per_client = fs["per_client_privacy"]
+    assert len(per_client) == 3
+    for t, rep in zip(produced, per_client):
+        assert rep == composed_epsilon(WEIGHTED_DP.privacy, t)
+
+
+def test_chaos_run_converges(chol_shards):
+    """Degraded-mode training still trains: the chaos run's loss drops."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    _, hist = _fit(adapter, WEIGHTED, chol_shards, "protocol-async", "fleet",
+                   epochs=4, steps=10, faults=CHAOS)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+@pytest.mark.parametrize("engine", QUEUE_ENGINES)
+def test_mid_fault_save_restore_resumes_schedule(chol_shards, engine,
+                                                 tmp_path):
+    """Checkpoint in the MIDDLE of the fault schedule, restore into a fresh
+    session, keep training with the same plan: bit-identical to the session
+    that never stopped (the schedule is keyed on the canonical step)."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    sa, _ = _fit(adapter, WEIGHTED_DP, chol_shards, engine, "fleet",
+                 epochs=1, steps=15, faults=CHAOS)
+    path = sa.save(str(tmp_path))
+    sb = SplitSession(adapter, WEIGHTED_DP, adamw(1e-2), engine=engine,
+                      seed=0, threaded=False, production="fleet")
+    sb.restore(path)
+    ha = sa.fit(chol_shards, epochs=1, steps_per_epoch=15, faults=CHAOS)
+    hb = sb.fit(chol_shards, epochs=1, steps_per_epoch=15, faults=CHAOS)
+    assert ha == hb
+    _assert_state_bitwise_equal(sa.state, sb.state)
+    assert sa.fault_stats == sb.fault_stats
+
+
+def test_transport_faults_replay_and_spend_budget(chol_shards):
+    """drop/dup releases: deterministic replay, and a transit-dropped item
+    still spent budget (it left the privacy layer)."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    plan = FaultPlan(n_clients=3, seed=11, drop_prob=0.2, dup_prob=0.1)
+    s1, h1 = _fit(adapter, WEIGHTED_DP, chol_shards, "protocol-async",
+                  "fleet", epochs=2, steps=8, faults=plan)
+    s2, h2 = _fit(adapter, WEIGHTED_DP, chol_shards, "protocol-async",
+                  "fleet", epochs=2, steps=8, faults=plan)
+    assert h1 == h2 and s1.fault_stats == s2.fault_stats
+    fs = s1.fault_stats
+    assert sum(fs["transit_dropped"]) + sum(fs["duplicated"]) > 0
+    # budget charged at production: the accountant's count equals the
+    # worst-case producer even though some of its items never arrived
+    assert s1.privacy_report()["releases"] == max(fs["releases_per_client"])
+
+
+# ------------------------------------------------------------ halt policies
+def test_quorum_halt_is_clean(chol_shards):
+    """Two of three hospitals crash below halt_below: the drive halts
+    cleanly with a reason instead of spinning on an empty queue."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    plan = FaultPlan(n_clients=3, crash_windows={0: [(5, 10**6)],
+                                                 1: [(5, 10**6)]},
+                     halt_below=2)
+    s, hist = _fit(adapter, WEIGHTED, chol_shards, "protocol-async", "fleet",
+                   epochs=3, steps=10, faults=plan)
+    fs = s.fault_stats
+    assert fs["halted"] and "quorum" in fs["halt_reason"]
+    assert hist[-1].get("halted") is True
+    assert len(hist) < 3  # the epoch loop stopped early
+
+
+def test_all_down_over_empty_queue_halts(chol_shards):
+    """An all-down fleet over an empty queue is a provably permanent stall
+    (crash windows are step-keyed; the step cannot advance) — it always
+    halts, even with halt_below=0."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    plan = FaultPlan(n_clients=3,
+                     crash_windows={c: [(0, 10**6)] for c in range(3)})
+    s, hist = _fit(adapter, WEIGHTED, chol_shards, "protocol-async", "fleet",
+                   epochs=1, steps=5, faults=plan)
+    assert s.fault_stats["halted"]
+    assert s.state["step"] == 0
+
+
+# ------------------------------------------- satellite: thread exceptions
+def test_client_thread_exception_propagates(chol_shards):
+    """A raising threaded client loop must surface as ClientLoopError (the
+    drive used to hang on join with a silently dead producer) and land in
+    fault_stats."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    bad = list(chol_shards)
+    x, y = bad[1]
+    bad[1] = (x[:0], y[:0])  # empty shard: sampling raises in the thread
+    session = SplitSession(adapter, WEIGHTED, adamw(1e-2),
+                           engine="protocol-async", seed=0, threaded=True,
+                           production="per-item", pop_timeout=0.05)
+    with pytest.raises(ClientLoopError) as ei:
+        session.fit(bad, epochs=1, steps_per_epoch=50)
+    assert ei.value.client_id == 1
+    assert isinstance(ei.value.cause, ValueError)
+    fs = session.fault_stats
+    assert fs["client_error_id"] == 1 and "ValueError" in fs["client_error"]
+
+
+# --------------------------------------- satellite: pop options + counters
+def test_pop_options_and_queue_counters(chol_shards):
+    """pop_timeout/pop_retries/pop_backoff are engine options; empty-handed
+    pops and backed-off re-pops are counted in FeatureQueue.stats()."""
+    q = FeatureQueue(max_size=4)
+    assert q.pop(timeout=0.0) is None
+    q.note_retry()
+    assert q.stats() == {"pushed": 0, "popped": 0, "rejected": 0,
+                         "timeouts": 1, "retries": 1}
+
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    # a plan whose dropout starves the consumer: retries must be exercised
+    plan = FaultPlan.dropout(3, 0.3, seed=3, period=10, down_for=5)
+    session = SplitSession(adapter, WEIGHTED, adamw(1e-2),
+                           engine="protocol-async", seed=0, threaded=True,
+                           production="fleet", pop_timeout=0.02,
+                           pop_retries=2, pop_backoff=2.0)
+    session.fit(chol_shards, epochs=1, steps_per_epoch=8, faults=plan)
+    stats = session.engine.stats
+    assert stats["popped"] >= 8
+    assert stats["timeouts"] >= 0 and stats["retries"] >= 0  # keys present
+
+    for bad in (dict(pop_timeout=-1.0), dict(pop_retries=-1),
+                dict(pop_backoff=0.5)):
+        with pytest.raises(ValueError):
+            SplitSession(adapter, WEIGHTED, adamw(1e-2),
+                         engine="protocol-async", seed=0, **bad)
+
+
+def test_deterministic_drive_counts_no_timeouts(chol_shards):
+    """The deterministic round-robin drive is synchronous: it never pops
+    empty-handed, so both queue engines keep timeouts == retries == 0 and
+    their stats stay comparable dict-for-dict (the PR 4/5 parity suite
+    asserts equality on these dicts)."""
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    s, _ = _fit(adapter, WEIGHTED, chol_shards, "fused-queue", "fleet")
+    assert s.engine.stats["timeouts"] == 0
+    assert s.engine.stats["retries"] == 0
+
+
+# ----------------------------------------------------- guards + validation
+def test_faults_rejected_by_non_queue_engines(chol_shards):
+    adapter = mlp_adapter(CHOLESTEROL_MLP)
+    session = SplitSession(adapter, WEIGHTED, adamw(1e-2), engine="looped-ref",
+                           seed=0)
+    with pytest.raises(ValueError, match="does not support faults"):
+        session.fit(chol_shards, epochs=1, steps_per_epoch=2,
+                    faults=FaultPlan.none(3))
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=0)
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=2, dropout_frac=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=2, dropout_frac=0.5, dropout_down=30,
+                  dropout_period=20)
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=2, drop_prob=0.7, dup_prob=0.6)
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=2, straggle={0: 0.5})
+    with pytest.raises(ValueError):
+        FaultPlan(n_clients=2, share_skew=(1.0,))
+    with pytest.raises(ValueError):  # plan size must match the config
+        adapter = mlp_adapter(CHOLESTEROL_MLP)
+        x, y = make_cholesterol(60, seed=0)
+        SplitSession(adapter, WEIGHTED, adamw(1e-2), engine="protocol-async",
+                     seed=0, threaded=False).fit(
+            split_clients(x, y), epochs=1, steps_per_epoch=1,
+            faults=FaultPlan.none(5))
+
+
+def test_per_client_report_shapes():
+    dp = DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0)
+    reps = per_client_report(dp, [0, 3, 7])
+    assert [r["releases"] for r in reps] == [0, 3, 7]
+    assert reps[0]["basic_epsilon"] == 0.0
+    assert reps[1]["basic_epsilon"] < reps[2]["basic_epsilon"]
+    assert per_client_report(None, [1, 2]) == []
+
+
+def test_availability_is_pure_and_reweighting_normalizes():
+    plan = FaultPlan.dropout(5, 0.4, seed=2, period=8, down_for=4,
+                             straggle={0: 2.0})
+    for step in (0, 3, 7, 11, 40):
+        assert plan.up_mask(step) == plan.up_mask(step)  # pure in step
+    up = [True, False, True, True, False]
+    eff = plan.effective_shares([0.2] * 5, up)
+    assert eff[1] == eff[4] == 0.0
+    assert abs(sum(eff) - 1.0) < 1e-12
+    quanta, _ = plan.cycle_quanta(0, [0.2] * 5)
+    down = [c for c in range(5) if not plan.available(c, 0)]
+    assert all(quanta[c] == 0 for c in down)
+    assert all(q >= 1 for c, q in enumerate(quanta) if c not in down)
+
+
+# ------------------------------------- the planner property (Hypothesis)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the module's other tests must still run without it
+    HAVE_HYPOTHESIS = False
+
+
+def _per_item_reference(queue_len, queue_size, step, total, quanta,
+                        available):
+    """Direct simulation of the per-item round-robin drive's lazy
+    production (produce -> push -> drain-on-full -> drop ends the cycle):
+    the ground truth ``_plan_round_robin_cycle`` must restate exactly."""
+    counts = [0] * len(quanta)
+    for i, q in enumerate(quanta):
+        if step >= total:
+            break
+        if available is not None and not available[i]:
+            continue
+        if q <= 0:
+            continue
+        for _ in range(int(q)):
+            counts[i] += 1  # produced immediately before its push attempt
+            if queue_len < queue_size:
+                queue_len += 1  # free slot
+            elif step < total and queue_len > 0:
+                step += 1  # ONE forced drain makes room; occupancy unchanged
+            else:
+                return counts  # target reached, queue full: item dropped
+    return counts
+
+
+def _random_cycle_case(rng):
+    n = int(rng.integers(1, 7))
+    quanta = rng.integers(0, 13, size=n).tolist()
+    queue_size = int(rng.integers(1, 17))
+    queue_len = int(rng.integers(0, queue_size + 1))
+    total = int(rng.integers(0, 61))
+    step = int(rng.integers(0, total + 1))
+    available = (None if rng.random() < 0.4
+                 else rng.integers(0, 2, size=n).astype(bool).tolist())
+    return queue_len, queue_size, step, total, quanta, available
+
+
+def _check_cycle_case(case):
+    queue_len, queue_size, step, total, quanta, available = case
+    planned = _plan_round_robin_cycle(queue_len, queue_size, step, total,
+                                      quanta, available=available)
+    reference = _per_item_reference(queue_len, queue_size, step, total,
+                                    quanta, available)
+    assert planned == reference, (case, planned, reference)
+
+
+def test_cycle_planner_matches_per_item_reference_seeded_sweep():
+    """The fleet cycle planner NEVER over-produces: under randomized
+    quanta, capacities, occupancy, step targets and availability masks it
+    matches the per-item drive's production counts exactly (over-producing
+    would desync client sampling RNGs, release counters and the (ε, δ)
+    budget). Seeded sweep — runs even without hypothesis installed."""
+    rng = np.random.default_rng(0)
+    for _ in range(2000):
+        _check_cycle_case(_random_cycle_case(rng))
+
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = settings(max_examples=100, deadline=None)
+
+    @st.composite
+    def _cycle_cases(draw):
+        n = draw(st.integers(1, 6))
+        quanta = draw(st.lists(st.integers(0, 12), min_size=n, max_size=n))
+        queue_size = draw(st.integers(1, 16))
+        queue_len = draw(st.integers(0, queue_size))
+        total = draw(st.integers(0, 60))
+        step = draw(st.integers(0, max(0, total)))
+        available = draw(st.one_of(
+            st.none(),
+            st.lists(st.booleans(), min_size=n, max_size=n),
+        ))
+        return queue_len, queue_size, step, total, quanta, available
+
+    @SETTINGS
+    @given(_cycle_cases())
+    def test_cycle_planner_matches_per_item_reference(case):
+        """Same property, minimized counterexamples via Hypothesis."""
+        _check_cycle_case(case)
