@@ -1,1 +1,1 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpoint.io import latest_checkpoint, load_checkpoint, save_checkpoint

@@ -1,8 +1,8 @@
 from repro.common.tree import (
-    tree_zeros_like,
     tree_add,
-    tree_scale,
-    tree_global_norm,
-    tree_size,
     tree_bytes,
+    tree_global_norm,
+    tree_scale,
+    tree_size,
+    tree_zeros_like,
 )

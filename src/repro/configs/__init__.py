@@ -1,24 +1,17 @@
-from repro.configs.base import (
-    ModelConfig,
-    ShapeConfig,
-    SHAPES,
-    get_config,
-    list_configs,
-    register,
-)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config, list_configs, register
 
 # Importing the package registers every assigned architecture + paper models.
-from repro.configs import (  # noqa: F401
-    llama3_2_1b,
-    qwen2_7b,
-    falcon_mamba_7b,
+from repro.configs import (
     command_r_plus_104b,
-    phi4_mini_3_8b,
-    hubert_xlarge,
-    granite_moe_1b_a400m,
-    mixtral_8x7b,
-    jamba_1_5_large_398b,
-    internvl2_26b,
-    paper_models,
     demo,
+    falcon_mamba_7b,
+    granite_moe_1b_a400m,
+    hubert_xlarge,
+    internvl2_26b,
+    jamba_1_5_large_398b,
+    llama3_2_1b,
+    mixtral_8x7b,
+    paper_models,
+    phi4_mini_3_8b,
+    qwen2_7b,
 )

@@ -18,21 +18,21 @@ inversion audit) lives in ``repro.privacy``; ``core.dp`` and
 ``core.inversion`` are deprecated shims over it.
 """
 from repro.core.faults import ClientLoopError, FaultPlan
+from repro.core.fedavg import train_fedavg
 from repro.core.queue import FeatureBank, FeatureQueue
-from repro.privacy.guard import DPConfig, PrivacyGuard
+from repro.core.session import SplitSession, available_engines, register_engine
 from repro.core.trainer import (
     CLIENT_AXIS,
     SplitTrainConfig,
+    device_put_shards,
     evaluate,
     evaluate_per_client,
-    make_spatio_temporal_step,
+    make_epoch_runner,
     make_looped_step,
     make_single_client_step,
-    make_epoch_runner,
-    device_put_shards,
+    make_spatio_temporal_step,
     single_client_config,
-    train_spatio_temporal,
     train_single_client,
+    train_spatio_temporal,
 )
-from repro.core.fedavg import train_fedavg
-from repro.core.session import SplitSession, available_engines, register_engine
+from repro.privacy.guard import DPConfig, PrivacyGuard

@@ -137,9 +137,10 @@ class FeatureQueue:
             return len(self._q)
 
     def stats(self) -> Dict[str, int]:
-        return {"pushed": self.pushed, "popped": self.popped,
-                "rejected": self.rejected, "timeouts": self.timeouts,
-                "retries": self.retries}
+        with self._lock:
+            return {"pushed": self.pushed, "popped": self.popped,
+                    "rejected": self.rejected, "timeouts": self.timeouts,
+                    "retries": self.retries}
 
 
 class FeatureBank:

@@ -1,8 +1,3 @@
-from repro.data.synthetic import (
-    make_covid_ct,
-    make_mura,
-    make_cholesterol,
-    MURA_BODY_PARTS,
-)
+from repro.data.synthetic import MURA_BODY_PARTS, make_cholesterol, make_covid_ct, make_mura
+from repro.data.lm import lm_batches, token_stream
 from repro.data.split import split_clients, train_val_test_split
-from repro.data.lm import token_stream, lm_batches

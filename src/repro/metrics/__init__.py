@@ -1,10 +1,10 @@
 from repro.metrics.losses import (
     bce_with_logits,
+    binary_accuracy,
     ce_with_logits,
     mse,
     msle,
+    multiclass_accuracy,
     rmsle,
     smape,
-    binary_accuracy,
-    multiclass_accuracy,
 )

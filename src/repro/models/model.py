@@ -4,7 +4,7 @@ This is the layer the launcher, dry-run, trainers and tests all call.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ client) and the ``server`` trunk (prefix remainder + scanned groups + head).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

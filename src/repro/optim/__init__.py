@@ -1,2 +1,2 @@
-from repro.optim.optimizers import adamw, sgd, apply_updates, clip_by_global_norm
-from repro.optim.schedule import cosine_schedule, linear_warmup_cosine, constant_schedule
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedule import constant_schedule, cosine_schedule, linear_warmup_cosine

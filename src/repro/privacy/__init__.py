@@ -24,8 +24,8 @@ from repro.privacy.audit import (
     privacy_metrics,
 )
 from repro.privacy.guard import (
-    DPConfig,
     GUARD_KEY_FOLD,
+    DPConfig,
     PrivacyGuard,
     batched_release_keys,
     clip_per_sample,

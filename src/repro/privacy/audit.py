@@ -59,7 +59,7 @@ def privacy_metrics(x_true: jnp.ndarray, x_rec: jnp.ndarray) -> Dict[str, float]
 
 def inversion_attack_report(
     client_forward, x_true: jnp.ndarray, *, steps: int = 300, seed: int = 0,
-    attacker_forward: Callable = None,
+    attacker_forward: Optional[Callable] = None,
 ) -> Dict[str, float]:
     """``client_forward`` produces the observed features (WITH the client's
     private noise); the attacker optimizes through ``attacker_forward``

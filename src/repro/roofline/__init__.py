@@ -1,1 +1,1 @@
-from repro.roofline.analysis import analyze_lowering, RooflineReport, HW_V5E
+from repro.roofline.analysis import HW_V5E, RooflineReport, analyze_lowering

@@ -10,7 +10,7 @@ predictable layouts beat padded ones).
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

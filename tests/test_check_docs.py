@@ -1,0 +1,279 @@
+"""Tests for tools/check_docs.py — the docs CI gate itself.
+
+Covers the three jobs it runs: relative-link + anchor checking, fenced
+```python block execution, and the steps/s citation cross-check against the
+BENCH json records. Each test builds a scratch repo and repoints the
+module's REPO root at it.
+"""
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools import check_docs  # noqa: E402
+
+
+@pytest.fixture()
+def scratch_repo(tmp_path, monkeypatch):
+    """A minimal repo layout: README.md + ROADMAP.md + docs/."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text("# Front door\n")
+    (tmp_path / "ROADMAP.md").write_text("# Roadmap\n")
+    monkeypatch.setattr(check_docs, "REPO", str(tmp_path))
+    return tmp_path
+
+
+def write(path, text):
+    path.write_text(textwrap.dedent(text))
+
+
+# ---------------------------------------------------------------------------
+# slugs and code stripping
+# ---------------------------------------------------------------------------
+
+def test_github_slug():
+    assert check_docs.github_slug("Quick Start") == "quick-start"
+    assert check_docs.github_slug("`SplitSession` API (v2)") == \
+        "splitsession-api-v2"
+    assert check_docs.github_slug("  Already-Hyphenated  ") == \
+        "already-hyphenated"
+
+
+def test_strip_code_removes_fences_and_inline():
+    text = "before\n```python\n# not a [heading](x.md)\n```\nafter `[l](m)` end"
+    stripped = check_docs.strip_code(text)
+    assert "heading" not in stripped
+    assert "[l](m)" not in stripped
+    assert "before" in stripped and "after" in stripped
+
+
+# ---------------------------------------------------------------------------
+# link checking
+# ---------------------------------------------------------------------------
+
+def test_check_links_ok(scratch_repo):
+    write(scratch_repo / "docs" / "api.md", """
+        # API
+
+        ## Sessions
+
+        [back](../README.md) and [self](#sessions)
+    """)
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [api](docs/api.md#sessions) [plain](ROADMAP.md)
+    """)
+    assert check_docs.check_links() == []
+
+
+def test_check_links_reports_broken_file_and_anchor(scratch_repo):
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [gone](docs/missing.md) [noanchor](ROADMAP.md#nope)
+    """)
+    errors = check_docs.check_links()
+    assert any("broken link -> docs/missing.md" in e for e in errors)
+    assert any("missing anchor -> ROADMAP.md#nope" in e for e in errors)
+    assert len(errors) == 2
+
+
+def test_check_links_fragment_on_non_markdown(scratch_repo):
+    (scratch_repo / "conf.py").write_text("x = 1\n")
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [bad](conf.py#frag)
+    """)
+    errors = check_docs.check_links()
+    assert len(errors) == 1 and "fragment on non-markdown" in errors[0]
+
+
+def test_check_links_skips_external_and_code_spans(scratch_repo):
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [ext](https://example.com/x#y) and `[(x_c, y_c)](fake.md)`
+
+        ```python
+        # [also fake](nope.md)
+        ```
+    """)
+    assert check_docs.check_links() == []
+
+
+def test_heading_inside_fence_does_not_satisfy_anchor(scratch_repo):
+    write(scratch_repo / "docs" / "guide.md", """
+        # Guide
+
+        ```text
+        # Fake Heading
+        ```
+    """)
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [x](docs/guide.md#fake-heading)
+    """)
+    errors = check_docs.check_links()
+    assert len(errors) == 1 and "missing anchor" in errors[0]
+
+
+# ---------------------------------------------------------------------------
+# fenced-block execution
+# ---------------------------------------------------------------------------
+
+def test_run_python_blocks_pass_and_fail(scratch_repo, capsys):
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        ```python
+        print("ok from block")
+        ```
+    """)
+    write(scratch_repo / "docs" / "bad.md", """
+        # Bad
+
+        ```python
+        raise SystemExit(3)
+        ```
+    """)
+    errors = check_docs.run_python_blocks()
+    assert len(errors) == 1
+    assert "docs/bad.md: python block #1 failed (exit 3)" in errors[0]
+    out = capsys.readouterr().out
+    assert "ran README.md python block #1 ok" in out
+    assert "executed 2 ```python blocks" in out
+
+
+def test_run_python_blocks_requires_readme_quickstart(scratch_repo):
+    # a README with no ```python block is itself an error: the quickstart
+    # is a promise the docs gate must keep
+    errors = check_docs.run_python_blocks()
+    assert errors == ["README.md: no ```python quickstart block found"]
+
+
+def test_python_blocks_get_pythonpath_src(scratch_repo):
+    (scratch_repo / "src").mkdir()
+    (scratch_repo / "src" / "fake_pkg_for_docs.py").write_text("VALUE = 41\n")
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        ```python
+        import fake_pkg_for_docs
+        assert fake_pkg_for_docs.VALUE + 1 == 42
+        ```
+    """)
+    assert check_docs.run_python_blocks() == []
+
+
+def test_text_fences_are_not_executed(scratch_repo):
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        ```python
+        print("fine")
+        ```
+
+        ```text
+        raise RuntimeError("never runs")
+        ```
+    """)
+    assert check_docs.run_python_blocks() == []
+
+
+# ---------------------------------------------------------------------------
+# steps/s citation cross-check
+# ---------------------------------------------------------------------------
+
+def bench(scratch_repo, trainer=None, kernels=None):
+    if trainer is not None:
+        (scratch_repo / "BENCH_trainer.json").write_text(json.dumps(trainer))
+    if kernels is not None:
+        (scratch_repo / "BENCH_kernels.json").write_text(json.dumps(kernels))
+
+
+def test_bench_values_walks_nested_and_derived_strings(scratch_repo):
+    bench(scratch_repo,
+          trainer={"fused": {"steps_per_sec": 871.27, "ok": True},
+                   "note": "steps_per_sec=12.5;speedup=4.3x",
+                   "runs": [3, 7.25]})
+    vals = check_docs._bench_values()
+    assert 871.27 in vals and 12.5 in vals and 4.3 in vals and 7.25 in vals
+    assert 1.0 not in vals  # the bool didn't leak in as a number
+
+
+def test_citation_matches_at_printed_precision(scratch_repo):
+    bench(scratch_repo, trainer={"steps_per_sec": 871.27})
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        The fused engine reaches 871.3 steps/s on this host.
+    """)
+    assert check_docs.check_steps_citations() == []
+
+
+def test_citation_mismatch_reported(scratch_repo):
+    bench(scratch_repo, trainer={"steps_per_sec": 871.27})
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        We claim 999.9 steps/s here.
+    """)
+    errors = check_docs.check_steps_citations()
+    assert len(errors) == 1 and "999.9 steps/s" in errors[0]
+
+
+def test_roadmap_is_exempt_from_citation_check(scratch_repo):
+    bench(scratch_repo, trainer={"steps_per_sec": 10.0})
+    write(scratch_repo / "ROADMAP.md", """
+        # Roadmap
+
+        PR 3 history: 123.4 steps/s back then.
+    """)
+    assert check_docs.check_steps_citations() == []
+
+
+def test_comma_grouped_integer_citation(scratch_repo):
+    bench(scratch_repo, kernels={"tokens": {"steps_per_sec": 1234.0}})
+    write(scratch_repo / "docs" / "perf.md", """
+        # Perf
+
+        Peak: 1,234 steps/s.
+    """)
+    assert check_docs.check_steps_citations() == []
+
+
+# ---------------------------------------------------------------------------
+# main() wiring
+# ---------------------------------------------------------------------------
+
+def test_main_exit_codes(scratch_repo, capsys):
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        ```python
+        print("ok")
+        ```
+    """)
+    assert check_docs.main() == 0
+    assert "docs check passed" in capsys.readouterr().out
+
+    write(scratch_repo / "README.md", """
+        # Front door
+
+        [broken](nope.md)
+
+        ```python
+        print("ok")
+        ```
+    """)
+    assert check_docs.main() == 1
+    assert "DOCS CHECK FAILED" in capsys.readouterr().out

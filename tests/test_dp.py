@@ -11,8 +11,8 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
-from repro.privacy import DPConfig, clip_per_sample, composed_epsilon, dp_release
 from repro.data.split import split_clients
+from repro.privacy import DPConfig, clip_per_sample, composed_epsilon, dp_release
 
 SETTINGS = settings(max_examples=20, deadline=None)
 

@@ -11,7 +11,7 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.models import ssm as ssm_mod
 from repro.models.attention import chunked_attention
-from repro.models.moe import moe_forward, init_moe
+from repro.models.moe import init_moe, moe_forward
 from repro.models.transformer import ModelOptions, period_of, stack_split
 
 KEY = jax.random.PRNGKey(0)

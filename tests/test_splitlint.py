@@ -1,0 +1,463 @@
+"""Fixture tests for the splitlint analyzer.
+
+Each rule family gets at least one known-bad snippet that must be flagged and
+one known-good snippet that must pass — including the guard-bypass fixture
+modeled on the real cut (``sample_batch -> client_forward -> queue.push``
+with the guard release deleted).
+"""
+import os
+import sys
+import textwrap
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools.splitlint import analyze_source  # noqa: E402
+from tools.splitlint import baseline as baseline_mod  # noqa: E402
+from tools.splitlint.registry import RULES  # noqa: E402
+
+
+def finds(src, rule):
+    src = textwrap.dedent(src)
+    return [f for f in analyze_source(src) if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# SPL101 — privacy-boundary taint
+# ---------------------------------------------------------------------------
+
+GUARD_BYPASS = """
+    class SplitClient:
+        def __init__(self, queue, params):
+            self.queue = queue
+            self.params = params
+
+        def sample_batch(self):
+            return self.data_x, self.data_y
+
+        def produce(self, key):
+            xb, yb = self.sample_batch()
+            feats = client_forward(self.params, xb, key)
+            return self.queue.push(0, feats, yb)
+"""
+
+GUARDED_CUT = """
+    class SplitClient:
+        def __init__(self, queue, adapter, guard):
+            self.queue = queue
+            self._fwd = make_client_release_fwd(adapter, guard)
+
+        def sample_batch(self):
+            return self.data_x, self.data_y
+
+        def produce(self, key):
+            xb, yb = self.sample_batch()
+            feats, labels = self._fwd(xb, yb, key)
+            return self.queue.push(0, feats, labels)
+"""
+
+
+def test_spl101_guard_bypass_flagged():
+    hits = finds(GUARD_BYPASS, "SPL101")
+    assert len(hits) == 1
+    assert "push" in hits[0].message
+
+
+def test_spl101_guarded_cut_passes():
+    assert finds(GUARDED_CUT, "SPL101") == []
+
+
+def test_spl101_inline_guard_release_passes():
+    src = """
+        def produce(adapter, guard, queue, xb, yb, key):
+            feats = adapter.client_forward(params, xb, key)
+            safe = guard(feats, key)
+            queue.push(0, safe, yb)
+    """
+    assert finds(src, "SPL101") == []
+
+
+def test_spl101_conditional_guard_enabled_passes():
+    # the looped-reference idiom: sanitize under ``if guard.enabled``
+    src = """
+        def loss(adapter, guard, server, client, xb, yb, key):
+            feats = adapter.client_forward(client, xb, key)
+            if guard.enabled:
+                feats = guard(feats, key)
+            return adapter.server_forward(server, feats)
+    """
+    assert finds(src, "SPL101") == []
+
+
+def test_spl101_unconditional_raw_feats_to_server_flagged():
+    src = """
+        def loss(adapter, server, client, xb, key):
+            feats = adapter.client_forward(client, xb, key)
+            return adapter.server_forward(server, feats)
+    """
+    assert len(finds(src, "SPL101")) == 1
+
+
+def test_spl101_banked_forward_guard_kwarg_classification():
+    unguarded = """
+        def epoch(adapter, queue, banks, xs, ys, keys):
+            fwd = banked_client_forward(adapter)
+            feats = fwd(banks, xs, keys)
+            queue.push(0, feats, ys)
+    """
+    guarded = unguarded.replace("banked_client_forward(adapter)",
+                                "banked_client_forward(adapter, guard=guard)")
+    assert len(finds(unguarded, "SPL101")) == 1
+    assert finds(guarded, "SPL101") == []
+
+
+def test_spl101_vmapped_lambda_source_and_bank_runner_sink():
+    # the distributed.py shape: vmapped client_forward feeding a runner
+    # built by make_server_bank_runner (a sink by construction)
+    src = """
+        def epoch(adapter, opt, server, opt_state, banks, xs, ys, keys):
+            run_bank = make_server_bank_runner(adapter, opt)
+            feats = jax.vmap(lambda b, x, k: client_forward(b, x, k))(
+                banks, xs, keys)
+            return run_bank(server, opt_state, 0, feats, ys)
+    """
+    hits = finds(src, "SPL101")
+    assert len(hits) == 1
+    assert "run_bank" in hits[0].message or "sink" in hits[0].message
+
+
+def test_spl101_suppression_comment():
+    src = GUARD_BYPASS.replace(
+        "return self.queue.push(0, feats, yb)",
+        "return self.queue.push(0, feats, yb)  # splitlint: ignore[SPL101]")
+    assert finds(src, "SPL101") == []
+    wrong_id = GUARD_BYPASS.replace(
+        "return self.queue.push(0, feats, yb)",
+        "return self.queue.push(0, feats, yb)  # splitlint: ignore[JAX201]")
+    assert len(finds(wrong_id, "SPL101")) == 1
+    bare = GUARD_BYPASS.replace(
+        "return self.queue.push(0, feats, yb)",
+        "return self.queue.push(0, feats, yb)  # splitlint: ignore")
+    assert finds(bare, "SPL101") == []
+
+
+# ---------------------------------------------------------------------------
+# JAX2xx — hygiene
+# ---------------------------------------------------------------------------
+
+def test_jax201_straight_line_reuse_flagged():
+    src = """
+        def f(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+    """
+    hits = finds(src, "JAX201")
+    assert len(hits) == 1
+    assert "already consumed" in hits[0].message
+
+
+def test_jax201_split_keys_pass():
+    src = """
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.normal(k2, (2,))
+            return a + b
+    """
+    assert finds(src, "JAX201") == []
+
+
+def test_jax201_reassigned_key_passes():
+    src = """
+        def f(key):
+            a = jax.random.normal(key, (2,))
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, (2,))
+            return a + b
+    """
+    assert finds(src, "JAX201") == []
+
+
+def test_jax201_loop_invariant_key_flagged():
+    src = """
+        def f(key, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """
+    hits = finds(src, "JAX201")
+    assert len(hits) == 1
+    assert "loop-invariant" in hits[0].message
+
+
+def test_jax201_folded_loop_key_passes():
+    src = """
+        def f(key, n):
+            out = []
+            for i in range(n):
+                k = jax.random.fold_in(key, i)
+                out.append(jax.random.normal(k, (2,)))
+            return out
+    """
+    assert finds(src, "JAX201") == []
+
+
+def test_jax202_host_sync_in_jit_flagged():
+    src = """
+        @jax.jit
+        def f(x):
+            return np.asarray(x) + x.item()
+    """
+    hits = finds(src, "JAX202")
+    assert len(hits) == 2
+
+
+def test_jax202_host_sync_outside_jit_passes():
+    src = """
+        def f(x):
+            return np.asarray(x) + x.item()
+    """
+    assert finds(src, "JAX202") == []
+
+
+def test_jax203_sampling_in_scan_body_flagged():
+    src = """
+        def body(carry, x):
+            noise = jax.random.normal(carry[0], (4,))
+            return carry, noise
+
+        def run(carry, xs):
+            return jax.lax.scan(body, carry, xs)
+    """
+    assert len(finds(src, "JAX203")) == 1
+
+
+def test_jax203_presampled_keys_pass():
+    src = """
+        def body(carry, x):
+            feats, noise = x
+            return carry, feats + noise
+
+        def run(carry, xs):
+            return jax.lax.scan(body, carry, xs)
+    """
+    assert finds(src, "JAX203") == []
+
+
+def test_jax204_bank_runner_unroll_flagged():
+    src = """
+        def make_server_bank_runner(adapter, opt, unroll=8):
+            def run_bank(carry, xs):
+                return jax.lax.scan(body_fn, carry, xs, unroll=unroll)
+            return run_bank
+    """
+    hits = finds(src, "JAX204")
+    assert len(hits) == 1
+    assert "unroll=1" in hits[0].message
+
+
+def test_jax204_unroll_one_and_min_clamp_pass():
+    src = """
+        def make_server_bank_runner(adapter, opt, unroll=1):
+            def run_bank(carry, xs):
+                return jax.lax.scan(
+                    body_fn, carry, xs, unroll=min(unroll, xs.shape[0]))
+            return run_bank
+    """
+    assert finds(src, "JAX204") == []
+
+
+def test_jax204_non_bank_scan_not_flagged():
+    src = """
+        def make_epoch_runner(adapter, opt, unroll=8):
+            def run_epoch(carry, xs):
+                return jax.lax.scan(body_fn, carry, xs, unroll=unroll)
+            return run_epoch
+    """
+    assert finds(src, "JAX204") == []
+
+
+def test_jax205_missing_donate_flagged():
+    src = """
+        @jax.jit
+        def step(state, batch, rng):
+            return state
+    """
+    assert len(finds(src, "JAX205")) == 1
+
+
+def test_jax205_donated_carry_passes():
+    src = """
+        @partial(jax.jit, donate_argnums=(0,))
+        def step(state, batch, rng):
+            return state
+    """
+    assert finds(src, "JAX205") == []
+
+
+def test_jax205_jit_call_site_flagged_and_non_carry_passes():
+    flagged = """
+        def step_core(state, xs, ys, rng):
+            return state
+        step = jax.jit(step_core)
+    """
+    fine = """
+        def apply(params, x):
+            return params
+        f = jax.jit(apply)
+    """
+    assert len(finds(flagged, "JAX205")) == 1
+    assert finds(fine, "JAX205") == []
+
+
+# ---------------------------------------------------------------------------
+# CONC3xx — concurrency
+# ---------------------------------------------------------------------------
+
+QUEUE_LIKE = """
+    import threading
+
+    class Q:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.pushed = 0
+
+        def push(self, item):
+            with self._lock:
+                self.pushed += 1
+
+        def stats(self):
+            {stats_body}
+"""
+
+
+def test_conc301_unlocked_read_flagged():
+    src = QUEUE_LIKE.format(stats_body="return {'pushed': self.pushed}")
+    hits = finds(src, "CONC301")
+    assert len(hits) == 1
+    assert "self.pushed" in hits[0].message
+
+
+def test_conc301_locked_read_passes():
+    src = QUEUE_LIKE.format(
+        stats_body="with self._lock:\n                "
+                   "return {'pushed': self.pushed}")
+    assert finds(src, "CONC301") == []
+
+
+def test_conc302_sleep_under_lock_flagged():
+    src = """
+        def drain(lock, q):
+            with lock:
+                time.sleep(0.1)
+                return q.pop()
+    """
+    assert len(finds(src, "CONC302")) == 1
+
+
+def test_conc302_sleep_outside_lock_passes():
+    src = """
+        def drain(lock, q):
+            with lock:
+                item = q.pop()
+            time.sleep(0.1)
+            return item
+    """
+    assert finds(src, "CONC302") == []
+
+
+def test_conc303_bare_daemon_body_flagged():
+    src = """
+        import threading
+
+        def worker():
+            run_forever()
+
+        t = threading.Thread(target=worker, daemon=True)
+    """
+    assert len(finds(src, "CONC303")) == 1
+
+
+def test_conc303_routed_exceptions_pass():
+    src = """
+        import threading
+
+        def worker(errors, stop):
+            pending = []
+            try:
+                run_forever()
+            except Exception as e:
+                errors.append(e)
+                stop.set()
+
+        t = threading.Thread(target=worker, daemon=True)
+    """
+    assert finds(src, "CONC303") == []
+
+
+def test_conc303_lambda_target_flagged():
+    src = """
+        import threading
+        t = threading.Thread(target=lambda: run(), daemon=True)
+    """
+    assert len(finds(src, "CONC303")) == 1
+
+
+# ---------------------------------------------------------------------------
+# registry / baseline machinery
+# ---------------------------------------------------------------------------
+
+def test_rule_registry_has_all_families():
+    ids = set(RULES)
+    assert {"SPL101", "JAX201", "JAX202", "JAX203", "JAX204", "JAX205",
+            "CONC301", "CONC302", "CONC303"} <= ids
+
+
+def test_syntax_error_is_its_own_finding():
+    hits = analyze_source("def broken(:\n    pass\n")
+    assert [f.rule for f in hits] == ["SPL000"]
+
+
+def test_baseline_roundtrip_and_matching(tmp_path):
+    findings = finds(GUARD_BYPASS, "SPL101")
+    text = baseline_mod.render_baseline(findings, justification="fixture")
+    p = tmp_path / "baseline.toml"
+    p.write_text(text)
+    entries = baseline_mod.load_baseline(str(p))
+    assert len(entries) == 1 and entries[0]["justification"] == "fixture"
+    new, stale = baseline_mod.apply_baseline(findings, entries)
+    assert new == [] and stale == []
+
+
+def test_baseline_is_multiset_and_reports_stale(tmp_path):
+    findings = finds(GUARD_BYPASS, "SPL101")
+    two = baseline_mod.render_baseline(findings * 2, justification="x")
+    p = tmp_path / "b.toml"
+    p.write_text(two)
+    loaded = baseline_mod.load_baseline(str(p))
+    assert len(loaded) == 2
+    new, stale = baseline_mod.apply_baseline(findings, loaded)
+    assert new == [] and len(stale) == 1  # one entry absorbed nothing
+
+
+def test_tiny_toml_fallback_parser_matches_real_parser(tmp_path):
+    findings = finds(GUARD_BYPASS, "SPL101")
+    text = baseline_mod.render_baseline(findings, justification='with "q"')
+    try:
+        import tomli
+    except ModuleNotFoundError:
+        pytest.skip("no tomli available to compare against")
+    entries_real = tomli.loads(text).get("finding", [])
+    entries_tiny = baseline_mod._tiny_parse(text)
+    assert entries_tiny == entries_real
+
+
+def test_real_tree_is_clean_under_baseline():
+    """The acceptance gate: the shipped tree has no unbaselined findings."""
+    from tools.splitlint.runner import main as lint_main
+    assert lint_main(["src", "benchmarks", "examples", "-q"]) == 0

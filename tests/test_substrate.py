@@ -5,13 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.data import make_cholesterol, make_covid_ct, make_mura, train_val_test_split
 from repro.data.lm import lm_batches, token_stream
 from repro.optim import cosine_schedule, linear_warmup_cosine
 from repro.sharding.specs import tree_specs
-from jax.sharding import PartitionSpec as P
 
 
 def test_covid_ct_generator_learnable_signal():

@@ -14,7 +14,6 @@ from repro.core.trainer import (
     SplitTrainConfig,
     client_batch_sizes,
     device_put_shards,
-    evaluate,
     fused_client_batch,
     make_epoch_runner,
     make_looped_step,

@@ -1,0 +1,121 @@
+"""The PR 4 "last fp32 bit" invariant, pinned.
+
+``make_server_bank_runner`` replays a bank of queued releases as ONE
+``lax.scan`` whose per-slot math must be bit-identical to stepping
+``SplitServer._step`` once per item. That only holds at ``unroll=1``:
+unrolling the scan re-associates the compiled update chain and the final
+fp32 bit drifts. These tests pin (a) the default everywhere that builds the
+runner, (b) the unroll value actually handed to ``lax.scan``, and (c) the
+bit-exact parity itself.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig
+from repro.core import session as session_mod
+from repro.core import trainer as trainer_mod
+from repro.core.adapters import mlp_adapter
+from repro.core.protocol import FeatureQueue, SplitServer
+from repro.core.trainer import make_server_bank_runner
+from repro.data import make_cholesterol, split_clients
+from repro.optim import adamw
+
+
+@pytest.fixture(scope="module")
+def bank_items():
+    """A small stack of guarded-release-shaped items: [K, b, ...]."""
+    x, y = make_cholesterol(240, seed=3)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    key = jax.random.PRNGKey(7)
+    params = ad.init(key)
+    K, b = 6, 16
+    feats = jnp.stack([
+        jnp.asarray(ad.client_forward(params["client"], x[i * b:(i + 1) * b],
+                                      None))
+        for i in range(K)
+    ])
+    labels = jnp.stack([jnp.asarray(y[i * b:(i + 1) * b]) for i in range(K)])
+    return ad, params, feats, labels
+
+
+def test_bank_runner_defaults_to_unroll_one():
+    sig = inspect.signature(make_server_bank_runner)
+    assert sig.parameters["unroll"].default == 1
+    assert sig.parameters["unroll"].kind is inspect.Parameter.KEYWORD_ONLY
+
+
+def test_fused_queue_engine_defaults_to_unroll_one():
+    sig = inspect.signature(session_mod.FusedQueueEngine.__init__)
+    assert sig.parameters["unroll"].default == 1
+
+
+def test_scan_inside_bank_runner_receives_unroll_one(monkeypatch, bank_items):
+    """Capture the kwarg at the lax.scan call itself: the runner may clamp
+    (``min(unroll, K)``) but at default settings the scan must see 1."""
+    ad, params, feats, labels = bank_items
+    opt = adamw(1e-2)
+    seen = []
+    real_scan = jax.lax.scan
+
+    def spy(f, init, xs=None, *args, **kwargs):
+        seen.append(kwargs.get("unroll", 1))
+        return real_scan(f, init, xs, *args, **kwargs)
+
+    monkeypatch.setattr(jax.lax, "scan", spy)
+    run_bank = make_server_bank_runner(ad, opt, 1.0)
+    server = params["server"]
+    valid = jnp.ones(feats.shape[0], dtype=bool)
+    run_bank(server, opt.init(server), 0, feats, labels, valid)
+    assert seen and all(u == 1 for u in seen)
+
+
+def test_session_builds_fused_queue_runner_with_unroll_one(monkeypatch):
+    """The engine wiring: FusedQueueEngine must hand unroll=1 through to
+    make_server_bank_runner unless the user overrides it."""
+    captured = {}
+    real_make = trainer_mod.make_server_bank_runner
+
+    def spy(adapter, opt, grad_clip=1.0, *, unroll=1):
+        captured["unroll"] = unroll
+        return real_make(adapter, opt, grad_clip, unroll=unroll)
+
+    monkeypatch.setattr(session_mod, "make_server_bank_runner", spy)
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    SplitSession(ad, SplitTrainConfig(server_batch=48), adamw(1e-2),
+                 engine="fused-queue", threaded=False, seed=0)
+    assert captured["unroll"] == 1
+
+
+def test_bank_replay_bit_exact_vs_stepwise_server(bank_items):
+    """The invariant itself: scanned replay == per-item SplitServer._step,
+    down to the last bit of every param/opt leaf and every loss."""
+    ad, params, feats, labels = bank_items
+    opt = adamw(1e-2)
+    server0 = jax.tree.map(jnp.array, params["server"])
+
+    run_bank = make_server_bank_runner(ad, opt, 1.0)
+    valid = jnp.ones(feats.shape[0], dtype=bool)
+    p_scan, o_scan, step, losses_scan = run_bank(
+        server0, opt.init(server0), 0, feats, labels, valid)
+
+    srv = SplitServer(ad, jax.tree.map(jnp.array, params["server"]),
+                      adamw(1e-2), FeatureQueue(max_size=8), clip_norm=1.0)
+    losses_ref = []
+    for i in range(feats.shape[0]):
+        srv.params, srv.opt_state, loss = srv._step(
+            srv.params, srv.opt_state, jnp.asarray(i, jnp.int32),
+            feats[i], labels[i])
+        losses_ref.append(loss)
+
+    assert int(step) == feats.shape[0]
+    np.testing.assert_array_equal(np.asarray(losses_scan),
+                                  np.asarray(jnp.stack(losses_ref)))
+    for la, lb in zip(jax.tree.leaves(p_scan), jax.tree.leaves(srv.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for la, lb in zip(jax.tree.leaves(o_scan), jax.tree.leaves(srv.opt_state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))

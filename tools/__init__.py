@@ -1,0 +1,2 @@
+"""Repo tooling: docs CI (``check_docs``) and the ``splitlint`` static
+analyzer (``python -m tools.splitlint``)."""

@@ -1,0 +1,18 @@
+"""splitlint — repo-specific static analysis for the split-learning stack.
+
+Three rule families guard the conventions the codebase is built on:
+
+* ``SPL1xx`` privacy boundary: client-cut values must pass a ``PrivacyGuard``
+  release before reaching server sinks;
+* ``JAX2xx`` JAX hygiene: key discipline, host syncs under trace, sampling in
+  scan bodies, ``unroll=1`` in bank runners, donation of step carries;
+* ``CONC3xx`` concurrency: lock coverage of queue state, sleeps under locks,
+  daemon-thread exception routing.
+
+See ``docs/static-analysis.md`` for the catalog and workflow.
+"""
+from tools.splitlint.registry import RULES, FileContext, Finding, check_file
+from tools.splitlint.runner import analyze_source, main
+
+__all__ = ["RULES", "FileContext", "Finding", "check_file",
+           "analyze_source", "main"]

@@ -1,0 +1,5 @@
+import sys
+
+from tools.splitlint.runner import main
+
+sys.exit(main())

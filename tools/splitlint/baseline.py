@@ -1,0 +1,123 @@
+"""Baseline (grandfathered findings) for splitlint.
+
+``baseline.toml`` holds the findings the team has looked at and decided to
+keep, each with a one-line justification. Matching is by fingerprint —
+``(rule, path, whitespace-normalized source line)`` — so entries survive
+line drift from unrelated edits. Counts are multiset-aware: two identical
+flows on identical source lines need two entries.
+
+The file is plain TOML (array of ``[[finding]]`` tables). Reading prefers
+stdlib ``tomllib`` (3.11+), then ``tomli``, then a tiny parser that handles
+exactly the subset ``--write-baseline`` emits, so the analyzer itself has no
+hard third-party dependency.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, Tuple
+
+from tools.splitlint.registry import Finding
+
+_ENTRY_KEYS = ("rule", "path", "line", "code", "justification")
+
+
+def _tiny_parse(text: str) -> List[Dict[str, object]]:
+    """Fallback parser for the restricted TOML this module writes:
+    ``[[finding]]`` tables of ``key = "value"`` / ``key = int`` pairs."""
+    entries: List[Dict[str, object]] = []
+    current: Dict[str, object] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[finding]]":
+            current = {}
+            entries.append(current)
+            continue
+        m = re.match(r"^(\w+)\s*=\s*(.+)$", line)
+        if not m or not entries:
+            continue
+        key, value = m.group(1), m.group(2).strip()
+        if value.startswith('"') and value.endswith('"'):
+            current[key] = value[1:-1].replace('\\"', '"').replace(
+                "\\\\", "\\")
+        elif re.fullmatch(r"-?\d+", value):
+            current[key] = int(value)
+    return entries
+
+
+def load_baseline(path: str) -> List[Dict[str, object]]:
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except FileNotFoundError:
+        return []
+    text = raw.decode("utf-8")
+    try:
+        import tomllib  # Python 3.11+
+        data = tomllib.loads(text)
+    except ModuleNotFoundError:
+        try:
+            import tomli
+            data = tomli.loads(text)
+        except ModuleNotFoundError:
+            return _tiny_parse(text)
+    return list(data.get("finding", []))
+
+
+def _entry_fingerprint(entry: Dict[str, object]) -> Tuple[str, str, str]:
+    code = str(entry.get("code", ""))
+    return (str(entry.get("rule", "")), str(entry.get("path", "")),
+            " ".join(code.split()))
+
+
+def apply_baseline(findings: List[Finding], entries: List[Dict[str, object]]
+                   ) -> Tuple[List[Finding], List[Dict[str, object]]]:
+    """Split ``findings`` into (new, stale-entries).
+
+    Every baseline entry absorbs at most one finding with the same
+    fingerprint; entries that absorb nothing are reported as stale so the
+    baseline shrinks as debt is paid down.
+    """
+    budget = collections.Counter(_entry_fingerprint(e) for e in entries)
+    new: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint()
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+        else:
+            new.append(f)
+    stale = []
+    leftover = dict(budget)
+    for e in entries:
+        fp = _entry_fingerprint(e)
+        if leftover.get(fp, 0) > 0:
+            leftover[fp] -= 1
+            stale.append(e)
+    return new, stale
+
+
+def _toml_escape(s: str) -> str:
+    return s.replace("\\", "\\\\").replace('"', '\\"')
+
+
+def render_baseline(findings: List[Finding],
+                    justification: str = "TODO: justify or fix") -> str:
+    lines = [
+        "# splitlint baseline — grandfathered findings, one table per flow.",
+        "# Matching is by (rule, path, normalized source line); the `line`",
+        "# field is informational. Every entry carries a justification.",
+        "",
+    ]
+    for f in sorted(findings, key=lambda f: (f.path, f.rule, f.line)):
+        lines += [
+            "[[finding]]",
+            f'rule = "{f.rule}"',
+            f'path = "{_toml_escape(f.path)}"',
+            f"line = {f.line}",
+            f'code = "{_toml_escape(f.snippet)}"',
+            f'justification = "{_toml_escape(justification)}"',
+            "",
+        ]
+    return "\n".join(lines)

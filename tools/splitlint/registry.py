@@ -1,0 +1,109 @@
+"""Rule registry, findings, and per-line suppressions for splitlint.
+
+A *rule* is a function ``check(ctx: FileContext) -> Iterable[Finding]``
+registered under a stable ID (``SPL101``, ``JAX203``, ...). The runner calls
+every registered rule on every collected file; rule IDs are the currency of
+the whole tool — suppression comments, baseline entries and the docs catalog
+all refer to them.
+
+Suppression: a finding is dropped when its source line (or the first line of
+the enclosing statement) carries ``# splitlint: ignore[RULE-ID]`` (several
+IDs comma-separated) or a bare ``# splitlint: ignore``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Callable, Dict, Iterable, List, Optional
+
+SUPPRESS_RE = re.compile(
+    r"#\s*splitlint:\s*ignore(?:\[([A-Za-z0-9,\s_-]+)\])?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative, posix separators
+    line: int  # 1-based
+    col: int
+    message: str
+    snippet: str  # stripped source text of ``line``
+
+    def fingerprint(self):
+        """Line-drift-tolerant identity used for baseline matching."""
+        return (self.rule, self.path, " ".join(self.snippet.split()))
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    check: Callable[["FileContext"], Iterable[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, summary: str):
+    """Register ``check(ctx)`` under ``rule_id``. One registration per ID."""
+
+    def deco(fn):
+        assert rule_id not in RULES, f"duplicate rule id {rule_id}"
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+
+    return deco
+
+
+class FileContext:
+    """One parsed file: source text, AST, and finding constructors."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(source, filename=relpath)
+        except SyntaxError as e:  # surfaced as its own finding by the runner
+            self.parse_error = e
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule_id, self.relpath, line, col, message,
+                       self.line_text(line))
+
+    def suppressed(self, finding: Finding) -> bool:
+        m = SUPPRESS_RE.search(self.lines[finding.line - 1]
+                               if finding.line <= len(self.lines) else "")
+        if not m:
+            return False
+        ids = m.group(1)
+        if ids is None:
+            return True  # bare ``splitlint: ignore`` silences every rule
+        return finding.rule in {s.strip() for s in ids.split(",")}
+
+
+def check_file(ctx: FileContext) -> List[Finding]:
+    """Run every registered rule on ``ctx`` and apply line suppressions."""
+    if ctx.parse_error is not None:
+        e = ctx.parse_error
+        return [Finding("SPL000", ctx.relpath, e.lineno or 1, e.offset or 0,
+                        f"syntax error: {e.msg}", ctx.line_text(e.lineno or 1))]
+    found: List[Finding] = []
+    for r in RULES.values():
+        found.extend(r.check(ctx))
+    return [f for f in found if not ctx.suppressed(f)]

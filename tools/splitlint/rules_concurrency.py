@@ -1,0 +1,224 @@
+"""CONC3xx — concurrency rules for the queue/protocol engines.
+
+CONC301  a class that owns a ``threading.Lock``/``Condition`` touches the
+         attributes it normally guards with that lock from outside a
+         ``with self._lock:`` block
+CONC302  ``time.sleep`` while holding a lock (stalls every other thread;
+         the backoff in ``_pop_with_backoff`` deliberately sleeps *outside*)
+CONC303  a daemon thread target without a broad try/except — its exceptions
+         vanish instead of being routed through the ``ClientLoopError``
+         surfacing path in ``drive_protocol``
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.splitlint.registry import FileContext, Finding, rule
+
+MUTATOR_METHODS = {
+    "append", "extend", "appendleft", "add", "insert", "update", "pop",
+    "popleft", "remove", "clear", "put",
+}
+LOCK_FACTORY_ATTRS = {"Lock", "RLock", "Condition", "Semaphore",
+                      "BoundedSemaphore"}
+
+
+def _terminal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> ``X`` (one level only)."""
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _is_lock_factory(call: ast.AST) -> bool:
+    return (isinstance(call, ast.Call)
+            and _terminal(call.func) in LOCK_FACTORY_ATTRS)
+
+
+class _ClassLocks:
+    """Lock topology of one class: which attrs are locks, which attrs are
+    only ever written under a lock (the protected set)."""
+
+    def __init__(self, cls: ast.ClassDef):
+        self.cls = cls
+        self.lock_attrs: Set[str] = set()
+        self.protected: Set[str] = set()
+        self._find_locks()
+        if self.lock_attrs:
+            self._find_protected()
+
+    def _find_locks(self) -> None:
+        for node in ast.walk(self.cls):
+            if isinstance(node, ast.Assign) and _is_lock_factory(node.value):
+                for tgt in node.targets:
+                    attr = _self_attr(tgt)
+                    if attr:
+                        self.lock_attrs.add(attr)
+
+    def guarded_withs(self, root: ast.AST):
+        for node in ast.walk(root):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    attr = _self_attr(item.context_expr)
+                    if attr in self.lock_attrs:
+                        yield node
+                        break
+
+    def _find_protected(self) -> None:
+        for w in self.guarded_withs(self.cls):
+            for node in ast.walk(w):
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        base = t
+                        while isinstance(base, ast.Subscript):
+                            base = base.value
+                        attr = _self_attr(base)
+                        if attr:
+                            self.protected.add(attr)
+                elif isinstance(node, ast.Call):
+                    func = node.func
+                    if (isinstance(func, ast.Attribute)
+                            and func.attr in MUTATOR_METHODS):
+                        attr = _self_attr(func.value)
+                        if attr:
+                            self.protected.add(attr)
+        self.protected -= self.lock_attrs
+
+
+@rule("CONC301", "lock-guarded shared state accessed outside the lock")
+def check_unlocked_access(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        locks = _ClassLocks(cls)
+        if not locks.lock_attrs or not locks.protected:
+            continue
+        for method in cls.body:
+            if not isinstance(method, ast.FunctionDef):
+                continue
+            if method.name == "__init__":
+                continue  # construction happens-before any other thread
+            guarded_nodes = set()
+            for w in locks.guarded_withs(method):
+                for node in ast.walk(w):
+                    guarded_nodes.add(id(node))
+            for node in ast.walk(method):
+                if id(node) in guarded_nodes:
+                    continue
+                attr = _self_attr(node)
+                if attr in locks.protected:
+                    findings.append(ctx.finding(
+                        "CONC301", node,
+                        f"`self.{attr}` is written under "
+                        f"`self.{sorted(locks.lock_attrs)[0]}` elsewhere but "
+                        f"accessed here outside any lock"))
+    return findings
+
+
+@rule("CONC302", "time.sleep while holding a lock")
+def check_sleep_under_lock(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    lockish = {"lock", "rlock", "mutex", "cond", "condition", "not_empty",
+               "not_full"}
+
+    def looks_like_lock(expr: ast.AST) -> bool:
+        if _is_lock_factory(expr):
+            return True
+        t = _terminal(expr)
+        if t is None:
+            return False
+        t = t.lower()
+        return t in lockish or t.endswith("lock") or t.endswith("cond")
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.With):
+            continue
+        if not any(looks_like_lock(item.context_expr) for item in node.items):
+            continue
+        for sub in ast.walk(node):
+            if (isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr == "sleep"
+                    and _terminal(sub.func.value) == "time"):
+                findings.append(ctx.finding(
+                    "CONC302", sub,
+                    "time.sleep while holding a lock stalls every thread "
+                    "contending for it; sleep outside the critical section "
+                    "(or use Condition.wait with a timeout)"))
+    return findings
+
+
+@rule("CONC303", "daemon-thread body without a broad exception route")
+def check_daemon_exceptions(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+
+    def has_broad_handler(fn: ast.FunctionDef) -> bool:
+        """A top-level try whose handler catches (at least) Exception and
+        does something with it — the drive_protocol pattern routes it into
+        an errors list surfaced as ClientLoopError after join."""
+        for stmt in fn.body:
+            if not isinstance(stmt, ast.Try):
+                continue
+            for handler in stmt.handlers:
+                htype = handler.type
+                names = set()
+                if htype is None:
+                    broad = True
+                else:
+                    exprs = htype.elts if isinstance(htype, ast.Tuple) \
+                        else [htype]
+                    names = {_terminal(e) for e in exprs}
+                    broad = bool(names & {"Exception", "BaseException"})
+                nontrivial = any(not isinstance(s, (ast.Pass,))
+                                 and not (isinstance(s, ast.Expr)
+                                          and isinstance(s.value, ast.Constant))
+                                 for s in handler.body)
+                if broad and nontrivial:
+                    return True
+        return False
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _terminal(node.func) != "Thread":
+            continue
+        kwargs = {kw.arg: kw.value for kw in node.keywords}
+        daemon = kwargs.get("daemon")
+        if not (isinstance(daemon, ast.Constant) and daemon.value is True):
+            continue
+        target = kwargs.get("target")
+        fn = None
+        if isinstance(target, ast.Name):
+            fn = defs.get(target.id)
+        elif isinstance(target, ast.Lambda):
+            fn = None  # lambdas cannot carry a try/except — always flag
+        if target is None:
+            continue
+        if fn is not None and has_broad_handler(fn):
+            continue
+        if fn is None and not isinstance(target, ast.Lambda):
+            continue  # unresolvable callable (method ref etc.) — stay quiet
+        findings.append(ctx.finding(
+            "CONC303", node,
+            "daemon thread body has no broad try/except; an exception here "
+            "dies silently instead of being routed to the ClientLoopError "
+            "surfacing path"))
+    return findings

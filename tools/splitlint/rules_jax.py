@@ -1,0 +1,415 @@
+"""JAX2xx — JAX hygiene rules.
+
+JAX201  PRNG key reused by several sampling calls without ``split``/``fold_in``
+JAX202  host-sync call (``np.asarray``, ``.item()``, ``.tolist()``, ``float``)
+        inside a jitted or scanned function
+JAX203  ``jax.random`` sampling inside a ``lax.scan`` body (keys must be
+        presampled outside the scan — the PR 3 perf lesson)
+JAX204  ``lax.scan(..., unroll != 1)`` in a bank runner (PR 4 bit-exactness)
+JAX205  jitted step function threads a large carry (first parameter named
+        ``state``/``carry``) without ``donate_argnums``
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional
+
+from tools.splitlint.registry import FileContext, Finding, rule
+
+SAMPLERS = {
+    "normal", "uniform", "bernoulli", "categorical", "gumbel", "laplace",
+    "truncated_normal", "randint", "permutation", "choice", "exponential",
+    "gamma", "poisson", "rademacher",
+}
+CARRY_PARAM_NAMES = {"state", "carry"}
+HOST_NP_CALLS = {"asarray", "array"}
+HOST_METHODS = {"item", "tolist"}
+HOST_BUILTINS = {"float", "int", "bool"}
+SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _terminal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_jax_random_call(call: ast.Call, names: set) -> bool:
+    """Matches ``jax.random.normal(...)`` / ``random.normal(...)`` /
+    ``jrandom.normal(...)`` — an Attribute whose owner mentions ``random``."""
+    func = call.func
+    if not isinstance(func, ast.Attribute) or func.attr not in names:
+        return False
+    owner = _terminal(func.value)
+    return owner is not None and "random" in owner
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    return _terminal(node) == "jit"
+
+
+def _is_scan_expr(node: ast.AST) -> bool:
+    return _terminal(node) == "scan"
+
+
+def walk_scope(node: ast.AST, *, include_root: bool = True
+               ) -> Iterator[ast.AST]:
+    """``ast.walk`` pruned at nested function/lambda scopes."""
+    if include_root and isinstance(node, SCOPE_NODES):
+        children = list(ast.iter_child_nodes(node))
+    else:
+        children = [node]
+    stack = children
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, SCOPE_NODES):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _defs_by_name(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def _first_param(fn) -> Optional[str]:
+    if isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+        args = fn.args
+        params = list(getattr(args, "posonlyargs", [])) + list(args.args)
+        if params:
+            name = params[0].arg
+            return params[1].arg if name == "self" and len(params) > 1 else name
+    return None
+
+
+def _has_donate(keywords) -> bool:
+    return any(kw.arg in {"donate_argnums", "donate_argnames"}
+               for kw in keywords)
+
+
+def _all_scopes(tree: ast.Module):
+    """Yield (scope_node, body_stmts) for the module and every def."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+# --------------------------------------------------------------------------
+@rule("JAX201", "PRNG key reused by several sampling calls without an "
+                "intervening split/fold_in")
+def check_key_reuse(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def sampler_calls(node: ast.AST, include_root=True):
+        for sub in walk_scope(node, include_root=include_root):
+            if isinstance(sub, ast.Call) and _is_jax_random_call(sub, SAMPLERS):
+                # a Call key expr (``fold_in(key, i)`` inline) is always fresh
+                if sub.args and not isinstance(sub.args[0], ast.Call):
+                    yield sub
+
+    def assigned_names(stmt: ast.stmt) -> set:
+        names = set()
+        for sub in walk_scope(stmt, include_root=False):
+            if isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (sub.targets if isinstance(sub, ast.Assign)
+                           else [sub.target])
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+        return names
+
+    def check_loop(loop) -> None:
+        """Inside a loop, a sampler keyed by a loop-invariant expression
+        draws with the same key every iteration."""
+        varying = assigned_names(loop)
+        # loop targets vary per iteration — the checked loop's own target and
+        # any nested for-loop's target (else ``ks[j]`` in an inner loop would
+        # look invariant to the outer loop's check)
+        for sub in walk_scope(loop, include_root=False):
+            if isinstance(sub, ast.For):
+                for n in ast.walk(sub.target):
+                    if isinstance(n, ast.Name):
+                        varying.add(n.id)
+        if isinstance(loop, ast.For):
+            for n in ast.walk(loop.target):
+                if isinstance(n, ast.Name):
+                    varying.add(n.id)
+        for call in sampler_calls(loop, include_root=False):
+            names_in_key = {n.id for n in ast.walk(call.args[0])
+                            if isinstance(n, ast.Name)}
+            if not (names_in_key & varying):
+                findings.append(ctx.finding(
+                    "JAX201", call,
+                    f"PRNG key `{ast.unparse(call.args[0])}` is "
+                    f"loop-invariant: every iteration samples with the same "
+                    f"key; fold_in the loop index"))
+
+    def linear_pass(body) -> None:
+        """Straight-line reuse: the same key expression feeding two sampler
+        calls in one scope without an intervening reassignment."""
+        used: Dict[str, ast.Call] = {}
+        used_base: Dict[str, Optional[str]] = {}
+
+        def handle(stmt: ast.stmt) -> None:
+            if isinstance(stmt, (*SCOPE_NODES, ast.ClassDef)):
+                return  # separate scope, gets its own pass
+            loops = [stmt] if isinstance(stmt, (ast.For, ast.While)) else []
+            loops += [sub for sub in walk_scope(stmt, include_root=False)
+                      if isinstance(sub, (ast.For, ast.While))]
+            for loop in loops:
+                check_loop(loop)
+            cleared = assigned_names(stmt)
+            for dump in [d for d, b in used_base.items() if b in cleared]:
+                used.pop(dump, None)
+                used_base.pop(dump, None)
+            for call in sampler_calls(stmt, include_root=False):
+                dump = ast.dump(call.args[0])
+                if dump in used and used[dump] is not call:
+                    findings.append(ctx.finding(
+                        "JAX201", call,
+                        f"PRNG key `{ast.unparse(call.args[0])}` already "
+                        f"consumed by a sampler on line {used[dump].lineno}; "
+                        f"split or fold_in first"))
+                else:
+                    used[dump] = call
+                    used_base[dump] = _base_name(call.args[0])
+
+        for stmt in body:
+            handle(stmt)
+
+    for _scope, body in _all_scopes(ctx.tree):
+        linear_pass(body)
+    # a call can be reached by several loop checks (nested loops) — dedupe
+    uniq = {}
+    for f in findings:
+        uniq.setdefault((f.line, f.col), f)
+    return list(uniq.values())
+
+
+# --------------------------------------------------------------------------
+def _traced_functions(ctx: FileContext):
+    """Yield (fn_node, how) for every function traced by jit or scan."""
+    defs = _defs_by_name(ctx.tree)
+    seen = set()
+    out = []
+
+    def emit(fn, how):
+        if fn is not None and id(fn) not in seen:
+            seen.add(id(fn))
+            out.append((fn, how))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jit_expr(dec):
+                    emit(node, "jit")
+                elif isinstance(dec, ast.Call) and (
+                        _is_jit_expr(dec.func)
+                        or any(_is_jit_expr(a) for a in dec.args)):
+                    emit(node, "jit")
+        elif isinstance(node, ast.Call):
+            if _is_jit_expr(node.func) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    emit(target, "jit")
+                elif isinstance(target, ast.Name) and target.id in defs:
+                    emit(defs[target.id], "jit")
+            elif _is_scan_expr(node.func) and node.args:
+                body = node.args[0]
+                if isinstance(body, ast.Lambda):
+                    emit(body, "scan")
+                elif isinstance(body, ast.Name) and body.id in defs:
+                    emit(defs[body.id], "scan")
+    return out
+
+
+def _traced_subtree(fn) -> Iterator[ast.AST]:
+    """Everything traced when ``fn`` runs under jit/scan: its whole subtree,
+    nested defs included (they are traced when called from the traced body)."""
+    roots = fn.body if isinstance(fn, ast.FunctionDef) else [fn.body]
+    for root in roots:
+        yield from ast.walk(root)
+
+
+@rule("JAX202", "host-synchronizing call inside a jitted/scanned function")
+def check_host_sync(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    seen_sites = set()
+    for fn, how in _traced_functions(ctx):
+        for node in _traced_subtree(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            site = (node.lineno, node.col_offset)
+            if site in seen_sites:
+                continue
+            func = node.func
+            msg = None
+            if (isinstance(func, ast.Attribute)
+                    and func.attr in HOST_NP_CALLS
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id in {"np", "numpy"}):
+                msg = (f"`np.{func.attr}` inside a {how}-traced function "
+                       f"forces a host sync; use jnp")
+            elif (isinstance(func, ast.Attribute)
+                  and func.attr in HOST_METHODS and not node.args):
+                msg = (f"`.{func.attr}()` inside a {how}-traced function "
+                       f"forces a host sync")
+            elif (isinstance(func, ast.Name) and func.id in HOST_BUILTINS
+                  and len(node.args) == 1
+                  and isinstance(node.args[0], ast.Name)):
+                msg = (f"`{func.id}(...)` on a traced value inside a "
+                       f"{how}-traced function forces a host sync")
+            if msg is not None:
+                seen_sites.add(site)
+                findings.append(ctx.finding("JAX202", node, msg))
+    return findings
+
+
+@rule("JAX203", "jax.random sampling inside a lax.scan body")
+def check_sampling_in_scan(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    seen_sites = set()
+    for fn, how in _traced_functions(ctx):
+        if how != "scan":
+            continue
+        for node in _traced_subtree(fn):
+            if isinstance(node, ast.Call) and _is_jax_random_call(
+                    node, SAMPLERS):
+                site = (node.lineno, node.col_offset)
+                if site in seen_sites:
+                    continue
+                seen_sites.add(site)
+                findings.append(ctx.finding(
+                    "JAX203", node,
+                    "sampling inside a lax.scan body serializes PRNG work "
+                    "per step; presample the keys outside the scan and "
+                    "thread them through xs"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+@rule("JAX204", "lax.scan with unroll != 1 inside a bank runner")
+def check_bank_unroll(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def resolve_int(expr: ast.AST, stack) -> Optional[int]:
+        """Best-effort static value of the unroll argument."""
+        if isinstance(expr, ast.Constant):
+            return expr.value if isinstance(expr.value, int) else None
+        if isinstance(expr, ast.Name):
+            for fn in reversed(stack):
+                args = fn.args
+                params = list(getattr(args, "posonlyargs", [])) + \
+                    list(args.args) + list(args.kwonlyargs)
+                defaults = list(args.defaults) + list(args.kw_defaults)
+                named = [p.arg for p in params]
+                if expr.id in named:
+                    tail = named[-len(defaults):] if defaults else []
+                    for pname, dflt in zip(tail, defaults):
+                        if (pname == expr.id
+                                and isinstance(dflt, ast.Constant)
+                                and isinstance(dflt.value, int)):
+                            return dflt.value
+                    return None
+                for node in walk_scope(fn):
+                    if isinstance(node, ast.Assign):
+                        for t in node.targets:
+                            if (isinstance(t, ast.Name) and t.id == expr.id
+                                    and isinstance(node.value, ast.Constant)
+                                    and isinstance(node.value.value, int)):
+                                return node.value.value
+            return None
+        if isinstance(expr, ast.Call) and _terminal(expr.func) == "min":
+            vals = [resolve_int(a, stack) for a in expr.args]
+            known = [v for v in vals if v is not None]
+            # min(a, b) <= every resolved operand: safe iff one is <= 1
+            if any(v <= 1 for v in known):
+                return 1
+            return None
+        return None
+
+    def visit_fn(fn, stack) -> None:
+        stack = stack + [fn]
+        in_bank = any("bank" in f.name.lower() for f in stack
+                      if hasattr(f, "name"))
+        for node in walk_scope(fn):
+            if (in_bank and isinstance(node, ast.Call)
+                    and _is_scan_expr(node.func)):
+                unroll_kw = next((kw for kw in node.keywords
+                                  if kw.arg == "unroll"), None)
+                if unroll_kw is None:
+                    continue  # jax defaults to unroll=1
+                v = resolve_int(unroll_kw.value, stack)
+                if v is None or v != 1:
+                    shown = ast.unparse(unroll_kw.value)
+                    findings.append(ctx.finding(
+                        "JAX204", node,
+                        f"lax.scan(unroll={shown}) in a bank runner; "
+                        f"unroll=1 is required for bit-exact parity with "
+                        f"the stepwise server (PR 4 invariant)"))
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                visit_fn(node, stack)
+
+    # visit every def whose nearest enclosing scope is the module (class
+    # methods included — ClassDef is not a scope barrier for walk_scope);
+    # visit_fn recurses into nested defs itself, threading the stack.
+    for node in walk_scope(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            visit_fn(node, [])
+    uniq = {}
+    for f in findings:
+        uniq[(f.line, f.col)] = f
+    return list(uniq.values())
+
+
+# --------------------------------------------------------------------------
+@rule("JAX205", "jitted step function threads a state carry without "
+                "donate_argnums")
+def check_missing_donate(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    defs = _defs_by_name(ctx.tree)
+
+    def flag(site, fn_name):
+        findings.append(ctx.finding(
+            "JAX205", site,
+            f"`{fn_name}` is jitted with a `state`/`carry` first argument "
+            f"but no donate_argnums; the old state buffers stay live for a "
+            f"full step"))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.FunctionDef):
+            if _first_param(node) not in CARRY_PARAM_NAMES:
+                continue
+            for dec in node.decorator_list:
+                if _is_jit_expr(dec):
+                    flag(dec, node.name)
+                elif isinstance(dec, ast.Call) and (
+                        _is_jit_expr(dec.func)
+                        or any(_is_jit_expr(a) for a in dec.args)):
+                    if not _has_donate(dec.keywords):
+                        flag(dec, node.name)
+        elif isinstance(node, ast.Call) and _is_jit_expr(node.func):
+            if not node.args or _has_donate(node.keywords):
+                continue
+            target = node.args[0]
+            fn = None
+            if isinstance(target, ast.Lambda):
+                fn = target
+            elif isinstance(target, ast.Name) and target.id in defs:
+                fn = defs[target.id]
+            if fn is not None and _first_param(fn) in CARRY_PARAM_NAMES:
+                flag(node, getattr(fn, "name", "<lambda>"))
+    return findings

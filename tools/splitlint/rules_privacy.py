@@ -1,0 +1,30 @@
+"""SPL1xx — privacy-boundary rules built on the taint engine.
+
+SPL101: a value that originates at the cut (``sample_batch`` batches,
+``client_forward`` activations, unguarded ``banked_client_forward`` outputs)
+reaches a server-side sink (``FeatureQueue.push``, ``server_forward``,
+``SplitServer._step``, a ``make_server_bank_runner`` runner) without passing
+through a ``PrivacyGuard`` release.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.splitlint.registry import FileContext, Finding, rule
+from tools.splitlint.taint import analyze_module
+
+
+@rule("SPL101", "client-side value reaches a server sink without a "
+               "PrivacyGuard release")
+def check_unguarded_release(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def report(node, sink_name: str) -> None:
+        findings.append(ctx.finding(
+            "SPL101", node,
+            f"value derived from the client cut flows into server sink "
+            f"`{sink_name}` without a PrivacyGuard release",
+        ))
+
+    analyze_module(ctx.tree, report)
+    return findings

@@ -1,0 +1,124 @@
+"""CLI runner: collect files, run every rule, apply suppressions and the
+baseline, report.
+
+Usage (from the repo root)::
+
+    python -m tools.splitlint src benchmarks examples
+    python -m tools.splitlint --list-rules
+    python -m tools.splitlint src --write-baseline   # refresh baseline.toml
+
+Exit code 0 when no *new* findings (baselined and suppressed ones are fine),
+1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from tools.splitlint import baseline as baseline_mod
+from tools.splitlint import rules_concurrency  # noqa: F401  (registers rules)
+from tools.splitlint import rules_jax  # noqa: F401
+from tools.splitlint import rules_privacy  # noqa: F401
+from tools.splitlint.registry import RULES, FileContext, Finding, check_file
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.toml")
+
+
+def collect_files(paths: List[str], root: str) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = [d for d in sorted(dirnames)
+                               if d not in {"__pycache__", ".git"}]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def analyze_file(path: str, root: str) -> List[Finding]:
+    rel = os.path.relpath(os.path.abspath(path), root)
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    ctx = FileContext(path, rel, source)
+    return check_file(ctx)
+
+
+def analyze_source(source: str, relpath: str = "fixture.py") -> List[Finding]:
+    """Test/fixture entry point: analyze a source string directly."""
+    return check_file(FileContext(relpath, relpath, source))
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="splitlint",
+        description="privacy-boundary, JAX-hygiene and concurrency lints "
+                    "for the split-learning repo")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories (default: src benchmarks "
+                         "examples)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline TOML (default: tools/splitlint/"
+                         "baseline.toml)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, baselined or not")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to the baseline file "
+                         "with TODO justifications and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in sorted(RULES.values(), key=lambda r: r.id):
+            print(f"{r.id}  {r.summary}")
+        return 0
+
+    paths = args.paths or ["src", "benchmarks", "examples"]
+    files = collect_files(paths, REPO_ROOT)
+    if not files:
+        print("splitlint: no python files found", file=sys.stderr)
+        return 1
+
+    findings: List[Finding] = []
+    for path in files:
+        findings.extend(analyze_file(path, REPO_ROOT))
+
+    if args.write_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            f.write(baseline_mod.render_baseline(findings))
+        print(f"splitlint: wrote {len(findings)} finding(s) to "
+              f"{os.path.relpath(args.baseline, REPO_ROOT)}")
+        return 0
+
+    entries = [] if args.no_baseline else baseline_mod.load_baseline(
+        args.baseline)
+    new, stale = baseline_mod.apply_baseline(findings, entries)
+
+    for f in sorted(new, key=lambda f: (f.path, f.line, f.col)):
+        print(f.render())
+        if not args.quiet and f.snippet:
+            print(f"    {f.snippet}")
+    if stale and not args.quiet:
+        for e in stale:
+            print(f"note: stale baseline entry {e.get('rule')} "
+                  f"{e.get('path')}:{e.get('line')} — finding no longer "
+                  f"produced; remove it", file=sys.stderr)
+    if not args.quiet:
+        kept = len(findings) - len(new)
+        print(f"splitlint: {len(files)} file(s), {len(new)} new finding(s), "
+              f"{kept} baselined/known", file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

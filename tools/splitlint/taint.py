@@ -1,0 +1,427 @@
+"""Intraprocedural taint engine for the privacy-boundary rules.
+
+The trust boundary of the platform is the *cut*: activations produced on the
+client side (``SplitClient.sample_batch`` batches, ``client_forward`` outputs,
+adapter client banks) must pass through a ``PrivacyGuard`` release before any
+server-side sink consumes them (``SplitServer._step``, the runner built by
+``make_server_bank_runner``, ``FeatureQueue.push``, ``server_forward``).
+
+The engine is intraprocedural: each function body is analyzed on its own, with
+a lexically scoped *callable environment* that classifies names as SOURCE
+(returns client-side values), SANITIZER (a guard release path), or SINK
+(server-side consumer). The environment is what lets the analysis follow the
+repo's factory idiom — ``make_client_release_fwd(adapter, guard)`` returns a
+sanitizer, ``banked_client_forward(adapter)`` without a ``guard=`` kwarg
+returns a source, ``make_server_bank_runner(...)`` returns a sink — without
+interprocedural dataflow.
+
+Semantics, chosen to keep the real tree's guarded paths clean while catching
+a deleted ``guard.release``:
+
+* sanitizer call results are untainted, whatever their arguments;
+* a sink call with a tainted argument reports one finding and its result is
+  treated untainted (one finding per flow, no cascades);
+* neutral calls conservatively propagate taint from any argument or from a
+  tainted receiver;
+* ``if`` merges optimistically: a name stays tainted only if some branch
+  taints it and no branch cleanly reassigns it (the looped-reference
+  ``if guard.enabled: feats = guard(...)`` pattern must come out clean);
+* loops run twice so taint introduced late in the body reaches uses at the
+  top on the second pass;
+* shape/dtype metadata (``x.shape`` etc.) is never tainted.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Callable, Dict, Optional, Set
+
+# --- classification vocabulary, matched against *terminal* names -----------
+SOURCE_CALLS = {"sample_batch", "client_forward"}
+SANITIZER_CALLS = {"release_with_noise", "dp_release"}
+SANITIZER_FACTORIES = {"make_client_release_fwd", "make_fleet_release_fwd"}
+SINK_FACTORIES = {"make_server_bank_runner"}
+GUARD_KWARG_FACTORIES = {"banked_client_forward"}  # sanitizer iff guard= given
+SINK_CALLS = {"push", "server_forward", "_step"}
+GUARD_NAME_RE = re.compile(r"(^|_)guard$")
+TRANSPARENT_ATTRS = {"shape", "dtype", "ndim", "size"}
+MUTATORS = {"append", "extend", "appendleft", "add", "insert", "update", "put"}
+
+SOURCE, SANITIZER, SINK, NEUTRAL = "source", "sanitizer", "sink", "neutral"
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> ``c``; ``name`` -> ``name``; else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class Env:
+    """Lexically scoped name -> classification map (module/class/function)."""
+
+    def __init__(self, parent: Optional["Env"] = None):
+        self.parent = parent
+        self.names: Dict[str, str] = {}
+
+    def lookup(self, name: str) -> str:
+        env: Optional[Env] = self
+        while env is not None:
+            if name in env.names:
+                return env.names[name]
+            env = env.parent
+        return NEUTRAL
+
+    def bind(self, name: str, cls: str) -> None:
+        if cls != NEUTRAL:
+            self.names[name] = cls
+        else:
+            self.names.pop(name, None)
+
+    def child(self) -> "Env":
+        return Env(self)
+
+
+def is_guard_named(node: ast.AST) -> bool:
+    """True for names the repo reserves for PrivacyGuard instances."""
+    t = terminal_name(node)
+    return t is not None and GUARD_NAME_RE.search(t) is not None
+
+
+class Classifier:
+    """Classifies callables (names, lambdas, factory calls, wrappers)."""
+
+    def __init__(self, env: Env):
+        self.env = env
+
+    def of_call_func(self, func: ast.AST) -> str:
+        """Classification of the callee expression of a Call."""
+        t = terminal_name(func)
+        if t in SANITIZER_CALLS:
+            return SANITIZER
+        if isinstance(func, (ast.Name, ast.Attribute)) and is_guard_named(func):
+            return SANITIZER
+        if t in SOURCE_CALLS:
+            return SOURCE
+        if t in SINK_CALLS:
+            # ``push``/``_step`` must be method calls (queue.push, server._step);
+            # a bare module-level ``push(...)`` is someone else's function.
+            if t in {"push", "_step"} and not isinstance(func, ast.Attribute):
+                return NEUTRAL
+            return SINK
+        if isinstance(func, ast.Name):
+            # ``self.X`` attributes are bound as ``self.X`` pseudo-names below.
+            return self.env.lookup(func.id)
+        if isinstance(func, ast.Attribute):
+            dotted = self._self_attr(func)
+            if dotted is not None:
+                return self.env.lookup(dotted)
+            return NEUTRAL
+        if isinstance(func, ast.Call):
+            # call-of-call: ``jax.vmap(lambda ...: client_forward(...))(xs)``
+            return self.of_expr(func)
+        if isinstance(func, ast.Lambda):
+            return self.of_body([func.body])
+        return NEUTRAL
+
+    @staticmethod
+    def _self_attr(node: ast.Attribute) -> Optional[str]:
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            return f"self.{node.attr}"
+        return None
+
+    def of_expr(self, node: ast.AST) -> str:
+        """Classification of an expression *as a callable value*."""
+        if isinstance(node, ast.Lambda):
+            return self.of_body([node.body])
+        if isinstance(node, ast.Name):
+            return self.env.lookup(node.id)
+        if isinstance(node, ast.Attribute):
+            t = terminal_name(node)
+            if t in SANITIZER_CALLS or is_guard_named(node):
+                return SANITIZER
+            if t in SOURCE_CALLS:
+                return SOURCE
+            dotted = self._self_attr(node)
+            if dotted is not None:
+                return self.env.lookup(dotted)
+            return NEUTRAL
+        if isinstance(node, ast.IfExp):
+            arms = {self.of_expr(node.body), self.of_expr(node.orelse)}
+            for cls in (SANITIZER, SINK, SOURCE):
+                if cls in arms:
+                    return cls
+            return NEUTRAL
+        if isinstance(node, ast.Call):
+            t = terminal_name(node.func)
+            if t in SANITIZER_FACTORIES:
+                return SANITIZER
+            if t in SINK_FACTORIES:
+                return SINK
+            if t in GUARD_KWARG_FACTORIES:
+                has_guard = any(kw.arg == "guard" and not _is_none(kw.value)
+                                for kw in node.keywords)
+                return SANITIZER if has_guard else SOURCE
+            # Generic wrapper rule: ``jax.jit(f)``, ``jax.vmap(f)``,
+            # ``partial(f, ...)``, ``_shard_banked_forward(fwd, mesh)`` — the
+            # wrapped callable's class shines through its arguments.
+            inherited = NEUTRAL
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                cls = self.of_expr(arg)
+                if cls == SANITIZER:
+                    return SANITIZER
+                if cls != NEUTRAL and inherited == NEUTRAL:
+                    inherited = cls
+            return inherited
+        return NEUTRAL
+
+    def of_body(self, stmts) -> str:
+        """Classify a def/lambda by scanning its body for source/sanitizer
+        calls: a body that releases through the guard is a sanitizer even if
+        it also calls ``client_forward`` (that is the canonical guarded fwd)."""
+        saw_source = False
+        for stmt in stmts:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    cls = self.of_call_func(node.func)
+                    if cls == SANITIZER:
+                        return SANITIZER
+                    if cls == SOURCE:
+                        saw_source = True
+        return SOURCE if saw_source else NEUTRAL
+
+
+def _is_none(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None
+
+
+def build_env(stmts, env: Env, class_name: Optional[str] = None) -> None:
+    """Pre-bind callables defined in this scope (defs, factory assignments,
+    ``self.X = ...`` attributes inside methods of ``class_name``)."""
+    cls_env = Classifier(env)
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            env.bind(stmt.name, cls_env.of_body(stmt.body))
+        elif isinstance(stmt, ast.ClassDef):
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for node in ast.walk(sub):
+                        if isinstance(node, ast.Assign):
+                            for tgt in node.targets:
+                                if (isinstance(tgt, ast.Attribute)
+                                        and isinstance(tgt.value, ast.Name)
+                                        and tgt.value.id == "self"):
+                                    c = cls_env.of_expr(node.value)
+                                    env.bind(f"self.{tgt.attr}", c)
+        elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                env.bind(tgt.id, cls_env.of_expr(stmt.value))
+
+
+class FunctionTaint:
+    """Runs the taint flow over one function body."""
+
+    def __init__(self, env: Env, report: Callable[[ast.AST, str], None]):
+        self.env = env
+        self.classifier = Classifier(env)
+        self.report = report
+        self.tainted: Set[str] = set()
+        self.clean: Set[str] = set()  # cleanly reassigned (for branch merge)
+
+    # -- expression taint ---------------------------------------------------
+    def taint_of(self, node: Optional[ast.AST]) -> bool:
+        if node is None or isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in TRANSPARENT_ATTRS:
+                return False
+            return self.taint_of(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.taint_of(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, ast.IfExp):
+            return self.taint_of(node.body) or self.taint_of(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.taint_of(node.value)
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return False
+        # BinOp / BoolOp / Compare / Tuple / Dict / comprehensions / ...
+        return any(self.taint_of(child) for child in ast.iter_child_nodes(node)
+                   if isinstance(child, (ast.expr, ast.comprehension)))
+
+    def _call_taint(self, call: ast.Call) -> bool:
+        operands = list(call.args) + [kw.value for kw in call.keywords]
+        cls = self.classifier.of_call_func(call.func)
+        if cls == SANITIZER:
+            # Guard release: arguments may legitimately carry raw features in.
+            return False
+        if cls == SOURCE:
+            for op in operands:  # still surface sinks nested in arguments
+                self.taint_of(op)
+            return True
+        if cls == SINK:
+            hit = None
+            for op in operands:
+                if self.taint_of(op) and hit is None:
+                    hit = op
+            if hit is not None:
+                self.report(call, terminal_name(call.func) or "<sink>")
+            return False  # one finding per flow; result is server-side
+        # neutral: propagate from receiver and operands
+        if self.taint_of(call.func):
+            return True
+        return any(self.taint_of(op) for op in operands)
+
+    # -- statement flow -----------------------------------------------------
+    def run(self, stmts) -> None:
+        for stmt in stmts:
+            self.visit(stmt)
+
+    def visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            self._assign(stmt.targets, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.taint_of(stmt.value)
+            name = self._base_name(stmt.target)
+            if t and name:
+                self.tainted.add(name)
+                self.clean.discard(name)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            value = stmt.value
+            if value is not None:
+                tainted = self.taint_of(value)
+                # mutator calls taint their receiver: ``runs.append(feats)``
+                if (tainted and isinstance(value, ast.Call)
+                        and isinstance(value.func, ast.Attribute)
+                        and value.func.attr in MUTATORS):
+                    base = self._base_name(value.func.value)
+                    if base:
+                        self.tainted.add(base)
+                        self.clean.discard(base)
+        elif isinstance(stmt, ast.If):
+            self._branch([stmt.body, stmt.orelse], extra_exprs=[stmt.test])
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            iter_tainted = self.taint_of(stmt.iter)
+            name = self._base_name(stmt.target)
+            for _ in range(2):  # two passes: late taint reaches early uses
+                if iter_tainted and name:
+                    self.tainted.add(name)
+                elif name and isinstance(stmt.target, ast.Name):
+                    self.tainted.discard(name)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self.taint_of(stmt.test)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                t = self.taint_of(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind_target(item.optional_vars, t)
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run(stmt.body)
+            for handler in stmt.handlers:
+                self.run(handler.body)
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            child = self.env.child()
+            build_env(stmt.body, child)
+            self.env.bind(stmt.name, Classifier(self.env).of_body(stmt.body))
+            analyze_function(stmt, child, self.report)
+        elif isinstance(stmt, ast.ClassDef):
+            child = self.env.child()
+            build_env([stmt], child)
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    analyze_function(sub, child.child(), self.report)
+        elif isinstance(stmt, (ast.Assert, ast.Raise, ast.Delete)):
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    self.taint_of(node)
+        # Pass / Import / Global / Nonlocal / Break / Continue: no dataflow
+
+    def _assign(self, targets, value: ast.expr) -> None:
+        t = self.taint_of(value)
+        # a clean RHS that *contains* a guard release (or any clean value)
+        # marks the target "cleanly reassigned" for the optimistic if-merge
+        for tgt in targets:
+            self._bind_target(tgt, t)
+        # keep the callable env current for factory assignments mid-body:
+        # ``run_bank = make_server_bank_runner(adapter, opt)`` then
+        # ``run_bank(params, ..., feats)`` must be a sink call.
+        if len(targets) == 1 and isinstance(targets[0], ast.Name):
+            self.env.bind(targets[0].id, self.classifier.of_expr(value))
+
+    def _bind_target(self, tgt: ast.AST, t: bool) -> None:
+        if isinstance(tgt, ast.Name):
+            if t:
+                self.tainted.add(tgt.id)
+                self.clean.discard(tgt.id)
+            else:
+                self.tainted.discard(tgt.id)
+                self.clean.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._bind_target(el, t)  # tuple-unpack taints every target
+        elif isinstance(tgt, ast.Starred):
+            self._bind_target(tgt.value, t)
+        elif isinstance(tgt, (ast.Subscript, ast.Attribute)):
+            base = self._base_name(tgt)
+            if t and base:
+                self.tainted.add(base)
+                self.clean.discard(base)
+
+    @staticmethod
+    def _base_name(node: ast.AST) -> Optional[str]:
+        while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            node = node.value
+        if isinstance(node, ast.Name):
+            return node.id
+        return None
+
+    def _branch(self, bodies, extra_exprs=()) -> None:
+        for e in extra_exprs:
+            self.taint_of(e)
+        entry_tainted = set(self.tainted)
+        entry_clean = set(self.clean)
+        out_tainted: Set[str] = set()
+        cleaned_somewhere: Set[str] = set()
+        for body in bodies:
+            self.tainted = set(entry_tainted)
+            self.clean = set(entry_clean)
+            self.run(body)
+            out_tainted |= self.tainted
+            cleaned_somewhere |= self.clean - entry_clean
+        # optimistic merge: a branch that cleanly reassigned the name
+        # (e.g. ``feats = guard(feats, key)``) clears it everywhere
+        self.tainted = out_tainted - cleaned_somewhere
+        self.clean = entry_clean | cleaned_somewhere
+
+
+def analyze_function(fn, env: Env, report: Callable[[ast.AST, str], None]):
+    """Flow-analyze one def. ``env`` is the enclosing scope's environment."""
+    flow = FunctionTaint(env.child(), report)
+    build_env(fn.body, flow.env)
+    flow.run(fn.body)
+
+
+def analyze_module(tree: ast.Module, report: Callable[[ast.AST, str], None]):
+    """Entry point: classify module-level callables, then analyze every
+    function (methods included) intraprocedurally."""
+    env = Env()
+    build_env(tree.body, env)
+    flow = FunctionTaint(env, report)
+    flow.run(tree.body)
