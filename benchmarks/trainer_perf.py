@@ -394,8 +394,169 @@ def bench_degraded(steps: int = 100, reps: int = 5, epochs: int = 4) -> List[Row
     ]
 
 
+def _trunk_heavy_setup():
+    """The sharded bench's workload: same 8-hospital COVID demo data and
+    client stages as ``_demo_setup``, but a trunk the model axis can
+    actually bite into — dense_units=(2048, 2048) puts ~8.9M params (two
+    2048-wide GEMMs per slot, forward + backward) at the server while the
+    client halves stay demo-sized. On the single-device path the trunk
+    replay IS the epoch; that is the regime the ``("clients", "model")``
+    grid exists for."""
+    from repro.configs.paper_models import COVID_CNN
+    from repro.core.adapters import cnn_adapter
+    from repro.core.trainer import SplitTrainConfig
+    from repro.data import make_covid_ct
+    from repro.data.split import split_clients
+
+    cfg = dataclasses.replace(
+        COVID_CNN, input_hw=(16, 16), stages=((8, 1), (16, 1)),
+        dense_units=(2048, 2048), cut_layers=2,
+    )
+    n_clients = 8
+    shares = (1.0 / n_clients,) * n_clients
+    tc = SplitTrainConfig(n_clients=n_clients, data_shares=(1.0,) * n_clients,
+                          server_batch=64)
+    x, y = make_covid_ct(600, hw=16, seed=0)
+    return cfg, cnn_adapter(cfg), tc, split_clients(x, y, shares=shares)
+
+
+def _trunk_collective_bytes(adapter, tc, mesh, slots: int) -> dict:
+    """Per-step collective traffic of the fused-queue trunk replay on
+    ``mesh``: lower ``make_server_bank_runner``'s jit with the params and
+    moment trees committed to their ``trunk_specs`` layouts (exactly how
+    the engine runs them), compile, and tally collective result bytes from
+    the post-SPMD HLO via ``roofline.hlo_breakdown.collective_bytes``."""
+    from repro.core.trainer import fused_client_batch, make_server_bank_runner
+    from repro.optim import adamw
+    from repro.roofline.hlo_breakdown import collective_bytes
+    from repro.sharding.specs import trunk_shardings
+
+    b = fused_client_batch(tc)
+    params = adapter.init(jax.random.PRNGKey(0))
+    server = params["server"]
+    opt = adamw(1e-3)
+    opt_state = opt.init(server)
+    feat = jax.eval_shape(
+        adapter.client_forward,
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                     params["client"]),
+        jax.ShapeDtypeStruct((b, 16, 16, 1), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    feats = jnp.zeros((slots,) + feat.shape, feat.dtype)
+    labels = jnp.zeros((slots, b), jnp.int32)
+    valid = jnp.ones((slots,), bool)
+    if mesh is not None:
+        server = jax.device_put(server, trunk_shardings(server, mesh))
+        opt_state = jax.device_put(opt_state, trunk_shardings(opt_state, mesh))
+    run_bank = make_server_bank_runner(adapter, opt, tc.grad_clip, mesh=mesh)
+    txt = run_bank.lower(server, opt_state, 0, feats, labels, valid)\
+                  .compile().as_text()
+    per_program = collective_bytes(txt)
+    return {k: v // slots for k, v in per_program.items()}
+
+
+def bench_sharded(steps: int = 60, reps: int = 3) -> List[Row]:
+    """The 2-D ``("clients", "model")`` grid on a trunk-heavy config.
+
+    Rows: the single-device fused-queue FLEET path (the engine the main
+    bench crowns, on this config — NOT comparable to the demo-config
+    ``fused_queue_fleet`` row, which stays untouched), then the same
+    engine+config on every 8-device mesh shape. Each shape's row records
+    steps/s and the trunk replay's per-step collective bytes from the
+    compiled HLO (``roofline.hlo_breakdown.collective_bytes``) — the
+    all-gather at the cut/logits and the row-parallel psum are the price
+    the model axis pays, measured, not guessed.
+
+    Acceptance (ISSUE 8): at least one mesh shape beats the single-device
+    baseline. Updates the ``sharded`` block of BENCH_trainer.json IN
+    PLACE; every pre-existing row is left untouched.
+
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.trainer_perf --sharded
+    """
+    from repro.launch.mesh import make_split_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev < 8:
+        raise SystemExit(
+            f"bench_sharded needs 8 devices, found {n_dev}: run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+    cfg, adapter, tc, shards = _trunk_heavy_setup()
+    shapes = [(8, 1), (4, 2), (2, 4), (1, 8)]
+    timers = {
+        "base": _session_epoch_timer(adapter, tc, shards, steps,
+                                     "fused-queue", threaded=False,
+                                     production="fleet"),
+    }
+    for c, m in shapes:
+        timers[f"{c}x{m}"] = _session_epoch_timer(
+            adapter, tc, shards, steps, "fused-queue", threaded=False,
+            production="fleet", mesh=make_split_mesh(c, m),
+        )
+    best = {name: 0.0 for name in timers}
+    order = list(timers)
+    for rep in range(reps):
+        for name in order[rep % len(order):] + order[: rep % len(order)]:
+            best[name] = max(best[name], steps / timers[name]())
+
+    coll = {"base": _trunk_collective_bytes(adapter, tc, None, steps)}
+    for c, m in shapes:
+        coll[f"{c}x{m}"] = _trunk_collective_bytes(
+            adapter, tc, make_split_mesh(c, m), steps)
+
+    base_sps = best["base"]
+    shape_rows = {}
+    for c, m in shapes:
+        key = f"{c}x{m}"
+        shape_rows[key] = {
+            "steps_per_sec": best[key],
+            "speedup_vs_single_device": best[key] / base_sps,
+            "collective_bytes_per_step": coll[key],
+        }
+    best_key = max(shape_rows, key=lambda k: shape_rows[k]["steps_per_sec"])
+    _update_bench_json({
+        "sharded": {
+            "config": {
+                "model": "demo-covid-cnn-16x16-cut2, dense_units=(2048, 2048)",
+                "engine": "fused-queue, deterministic fleet drive",
+                "server_batch": tc.server_batch,
+                "n_clients": tc.n_clients,
+                "steps_per_epoch": steps,
+                "timing": f"best-of-{reps}",
+                "devices": n_dev,
+                "mesh": "launch.mesh.make_split_mesh(clients, model)",
+                "collectives": "per-step bytes from the compiled trunk-replay "
+                               "HLO (roofline.hlo_breakdown.collective_bytes)",
+            },
+            "single_device_steps_per_sec": base_sps,
+            "single_device_collective_bytes_per_step": coll["base"],
+            "shapes": shape_rows,
+            "best_shape": best_key,
+            "best_speedup_vs_single_device":
+                shape_rows[best_key]["speedup_vs_single_device"],
+        }
+    })
+    rows = [("trainer/sharded_base", 1e6 / base_sps,
+             f"steps_per_sec={base_sps:.1f}")]
+    for key, r in shape_rows.items():
+        ag = sum(r["collective_bytes_per_step"].values())
+        rows.append((f"trainer/sharded_{key}", 1e6 / r["steps_per_sec"],
+                     f"steps_per_sec={r['steps_per_sec']:.1f}"
+                     f";vs_base={r['speedup_vs_single_device']:.2f}x"
+                     f";collective_B_per_step={ag}"))
+    return rows
+
+
 if __name__ == "__main__":
-    bench = bench_degraded if "--degraded" in sys.argv[1:] else bench_fused_vs_looped
+    argv = sys.argv[1:]
+    if "--degraded" in argv:
+        bench = bench_degraded
+    elif "--sharded" in argv:
+        bench = bench_sharded
+    else:
+        bench = bench_fused_vs_looped
     print("name,us_per_call,derived")
     for name, us, derived in bench():
         print(f"{name},{us:.1f},{derived}")

@@ -185,10 +185,17 @@ class FleetProducer:
     Distinct total item counts compile separate fleet programs (the item
     axis is a static shape); a run settles on one steady-state cycle shape
     plus at most a couple of tail shapes.
+
+    ``mesh=`` (a ``launch.mesh`` client or split mesh) shards the stacked
+    banks' leading client axis (and the stacked base keys) over the mesh's
+    ``"clients"`` axis — production reads device-local banks while the
+    consumer side of the cut shards the TRUNK over the ``"model"`` axis.
+    Pure placement: ``device_put`` moves bytes, so every release is
+    bit-identical to the unplaced fleet's.
     """
 
     def __init__(self, clients: Sequence[SplitClient], fleet_fwd, *,
-                 chunk: int = 8):
+                 chunk: int = 8, mesh=None):
         self.clients = list(clients)
         self.chunk = int(chunk)  # threaded mode's per-client dispatch width
         self._fwd = fleet_fwd
@@ -196,6 +203,21 @@ class FleetProducer:
             lambda *xs: jnp.stack(xs), *[c.params for c in self.clients]
         )
         self._keys = jnp.stack([c._key for c in self.clients])
+        if (mesh is not None and "clients" in mesh.axis_names
+                and mesh.shape["clients"] > 1):
+            from jax.sharding import NamedSharding
+
+            from repro.sharding.specs import client_bank_specs
+
+            def place(tree):
+                specs = client_bank_specs(tree, mesh, "clients")
+                return jax.tree.map(
+                    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                    tree, specs,
+                )
+
+            self._banks = place(self._banks)
+            self._keys = place(self._keys)
 
     def produce(self, counts: Sequence[int]) -> collections.deque:
         """Produce ``counts[c]`` items for client ``c`` (cycle order: all of
@@ -232,11 +254,22 @@ class FleetProducer:
 
 
 class SplitServer:
-    """The centralized server: trunk params + optimizer + the feature queue."""
+    """The centralized server: trunk params + optimizer + the feature queue.
+
+    ``mesh=`` (a ``launch.mesh.make_split_mesh`` grid) makes each pop's
+    trunk update tensor-parallel: params and moments are constrained to
+    their ``repro.sharding.specs.trunk_specs`` layouts inside the jitted
+    step, so the matmuls partition over the ``"model"`` axis with an
+    all-gather only at the cut and the logits. A mesh whose model axis has
+    size 1 compiles the identical unsharded program (the constraint helper
+    is identity there) — the σ=0 bit-parity contract with the fused-queue
+    replay is untouched."""
 
     def __init__(self, adapter: SplitAdapter, server_params, opt: Optimizer,
                  queue: FeatureQueue, clip_norm: float = 1.0,
-                 opt_state=None, step_count: int = 0):
+                 opt_state=None, step_count: int = 0, mesh=None):
+        from repro.core.trainer import _trunk_sharder
+
         self.adapter = adapter
         self.params = server_params
         self.opt = opt
@@ -245,9 +278,13 @@ class SplitServer:
         self.step_count = step_count
         self.losses: List[float] = []
         clip = clip_norm
+        shard_trunk = _trunk_sharder(mesh)
 
         @jax.jit
         def _step(params, opt_state, step, features, labels):
+            params = shard_trunk(params)
+            opt_state = shard_trunk(opt_state)
+
             def lf(p):
                 out = adapter.server_forward(p, features)
                 return adapter.loss(out, labels)

@@ -29,10 +29,17 @@ Canonical state::
 
 Engines register by name (see ``available_engines()``); ``engine="auto"``
 picks the fused engine and folds in the scan-vs-stepwise backend heuristic
-(``_auto_epoch_mode``). ``mesh=`` shards the canonical leading client axis
-over a device mesh with ``jax.shard_map`` so each hospital's privacy layer
-runs on its own device; on a single-device host it is a bit-exact no-op
-(asserted by the CPU parity test).
+(``_auto_epoch_mode``). ``mesh=`` accepts a 1-D client mesh
+(``launch.mesh.make_client_mesh``) or the 2-D ``("clients", "model")`` grid
+(``launch.mesh.make_split_mesh``): the canonical leading client axis shards
+over ``"clients"`` with ``jax.shard_map`` so each hospital's privacy layer
+runs on its own device, and the server trunk (plus its moment trees) shards
+tensor-parallel over ``"model"`` via ``repro.sharding.specs.trunk_specs`` —
+for the fused engines AND the queue engines (``SplitServer`` steps and the
+banked replay both constrain the trunk; ``FleetProducer`` keeps production
+on the client axis). On a 1x1 (or single-device) mesh every path is a
+bit-exact no-op, asserted by the CPU parity tests and the
+``tests/test_mesh_2d.py`` sweep.
 
 Role in the engine registry: this module IS the registry (the
 ``register_engine`` decorator and every built-in engine class — fused
@@ -143,7 +150,8 @@ class FusedEngine:
     """The throughput path (PR 1): stacked banks + vmapped privacy layer,
     on-device sampling, scanned or stepwise epochs. Native state IS the
     canonical state. ``mode=None`` ("auto") folds in ``_auto_epoch_mode``
-    per fit call. The only engine that honors ``mesh=``."""
+    per fit call. Honors both mesh axes: client banks + epoch data shard
+    over ``"clients"``, the trunk tensor-parallel over ``"model"``."""
 
     def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
                  opt: Optimizer, *, mesh: Optional[Mesh] = None,
@@ -173,19 +181,30 @@ class FusedEngine:
 
     def _place(self, state, data_x, data_y):
         """Shard the client axis of the banks + epoch data over the mesh so
-        the shard_mapped privacy layer reads device-local operands."""
+        the shard_mapped privacy layer reads device-local operands; on a 2-D
+        grid also pre-place the server trunk in its ``trunk_specs`` layout
+        (the in-step constraint would reshard it anyway — placing it here
+        once, including right after a cross-shape ``restore()``, avoids a
+        per-epoch host-layout transfer)."""
         if self.mesh is None:
             return state, data_x, data_y
-        from repro.sharding.specs import client_bank_specs
+        from repro.core.trainer import MODEL_AXIS
+        from repro.sharding.specs import client_bank_specs, trunk_shardings
 
         specs = client_bank_specs(state["client_banks"], self.mesh, CLIENT_AXIS)
         banks = jax.tree.map(
             lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
             state["client_banks"], specs,
         )
+        state = {**state, "client_banks": banks}
+        if (MODEL_AXIS in self.mesh.axis_names
+                and self.mesh.shape[MODEL_AXIS] > 1):
+            state["server"] = jax.device_put(
+                state["server"], trunk_shardings(state["server"], self.mesh)
+            )
         data_sh = NamedSharding(self.mesh, P(CLIENT_AXIS))
         return (
-            {**state, "client_banks": banks},
+            state,
             jax.device_put(data_x, data_sh),
             jax.device_put(data_y, data_sh),
         )
@@ -323,7 +342,14 @@ class ProtocolEngine:
     round-robin mode (used by the parity tests). ``production="fleet"``
     (default) batches the fleet's releases — one vmapped dispatch per queue
     cycle over the stacked client banks, bit-identical per item to
-    ``production="per-item"`` (see ``protocol.FleetProducer``)."""
+    ``production="per-item"`` (see ``protocol.FleetProducer``).
+
+    ``mesh=`` (a ``make_split_mesh`` grid) splits the protocol across both
+    axes of the cut: fleet production places the stacked banks over
+    ``"clients"``, and every ``SplitServer`` trunk update runs
+    tensor-parallel over ``"model"`` (``trunk_specs`` constraints inside
+    the jitted step). The queue itself — the trust boundary — stays a host
+    object; only what was already crossing it is placed."""
 
     name = "protocol-async"
 
@@ -334,9 +360,12 @@ class ProtocolEngine:
                  production: str = "fleet", fleet_chunk: int = 8,
                  pop_timeout: float = 1.0, pop_retries: int = 0,
                  pop_backoff: float = 2.0):
-        if mesh is not None:
+        if (mesh is not None and CLIENT_AXIS in mesh.axis_names
+                and tc.n_clients % mesh.shape[CLIENT_AXIS] != 0):
             raise ValueError(
-                f"{self.name} does not support mesh=; use a fused engine"
+                f"n_clients={tc.n_clients} does not divide over mesh axis "
+                f"{CLIENT_AXIS!r} of size {mesh.shape[CLIENT_AXIS]}; the "
+                f"stacked client banks shard their leading axis evenly"
             )
         if tc.mode != "detached":
             raise ValueError(
@@ -360,6 +389,7 @@ class ProtocolEngine:
             # a shrinking backoff would busy-wait the starved consumer
             raise ValueError(f"pop_backoff must be >= 1.0, got {pop_backoff}")
         self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.mesh = mesh
         self.threaded = threaded
         self.client_batch = client_batch or fused_client_batch(tc)
         self.queue_size, self.per_client_cap = queue_size, per_client_cap
@@ -445,6 +475,7 @@ class ProtocolEngine:
             self.adapter, state["server"], self.opt, queue,
             clip_norm=self.tc.grad_clip,
             opt_state=state["opt"], step_count=int(state["step"]),
+            mesh=self.mesh,
         )
 
     def _make_fleet(self, clients):
@@ -454,7 +485,7 @@ class ProtocolEngine:
         if self.production != "fleet":
             return None
         return protocol_mod.FleetProducer(
-            clients, self._fleet_fwd, chunk=self.fleet_chunk
+            clients, self._fleet_fwd, chunk=self.fleet_chunk, mesh=self.mesh,
         )
 
     def _consume_epoch(self, consumer, clients, queue, shares, steps_per_epoch,
@@ -636,7 +667,7 @@ class FusedQueueEngine(ProtocolEngine):
                          pop_timeout=pop_timeout, pop_retries=pop_retries,
                          pop_backoff=pop_backoff)
         self._run_bank = make_server_bank_runner(
-            adapter, opt, tc.grad_clip, unroll=unroll
+            adapter, opt, tc.grad_clip, unroll=unroll, mesh=mesh
         )
 
     def _make_consumer(self, state, queue):

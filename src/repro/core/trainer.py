@@ -62,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.adapters import (
     SplitAdapter,
@@ -78,6 +78,41 @@ from repro.privacy.guard import DPConfig, PrivacyGuard
 # Mesh axis name the canonical state's leading client dimension shards over
 # (see ``repro.core.session.SplitSession(mesh=...)`` / ``launch.mesh.make_client_mesh``).
 CLIENT_AXIS = "clients"
+# Mesh axis name the server TRUNK's parameters shard over, tensor-parallel
+# (the second axis of ``launch.mesh.make_split_mesh`` grids; see
+# ``repro.sharding.specs.trunk_specs`` for which leaf shards which dim).
+MODEL_AXIS = "model"
+
+
+def _trunk_sharder(mesh: Optional[Mesh], axis: str = MODEL_AXIS):
+    """Constraint function for the server trunk (params OR a moment tree
+    mirroring it): ``with_sharding_constraint`` every leaf to its
+    ``trunk_specs`` layout so GSPMD partitions the trunk matmuls over the
+    mesh's model axis. Identity when there is no mesh, no model axis, or the
+    axis has size 1 — which is exactly what keeps the 1x1 / Nx1 meshes
+    bit-exact with the unsharded engines (no constraint, no reassociation).
+
+    Deliberately GSPMD constraints rather than a manual ``shard_map`` psum:
+    the partitioner keeps the op sequence (and therefore the fp32 rounding)
+    of each partitioned matmul identical to the unsharded program wherever
+    the layout is replicated, and inserts the all-gathers only where the
+    specs force one — at the CUT (every model shard consumes the full
+    released features) and at the LOGITS (the head falls back to replicated
+    when n_classes doesn't divide the axis)."""
+    if mesh is None or axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return lambda tree: tree
+    from repro.sharding.specs import trunk_specs
+
+    def constrain(tree):
+        specs = trunk_specs(tree, mesh, axis=axis)
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)
+            ),
+            tree, specs,
+        )
+
+    return constrain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,10 +231,31 @@ def _shard_banked_forward(fwd_banked, mesh: Mesh, client_axis: str):
     device. On a 1-device mesh this is a bit-exact no-op — the per-shard body
     is the same vmapped jaxpr over the full client axis."""
     spec = P(client_axis)
-    return shard_map(
+    sharded = shard_map(
         fwd_banked, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
         check_rep=False,
     )
+    if len(mesh.axis_names) == 1:
+        return sharded
+
+    # 2-D ("clients", "model") grids: ``check_rep=False`` skips verifying
+    # that operands are REPLICATED over the unmentioned model axis, and the
+    # unchecked full-to-shard conversion reads whatever is locally resident
+    # — if GSPMD laid an operand out sharded over "model" (its right under
+    # plain jit), each shard-body would silently misread a model-shard as
+    # the full per-client slice. Pin every operand to exactly the layout
+    # the manual body assumes: sharded over the client axis, replicated
+    # elsewhere. Pure layout, so Nx1 grids stay bit-exact with the 1-D mesh.
+    def constrained(banks, xs, keys):
+        pin = lambda t: jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, spec)
+            ),
+            t,
+        )
+        return sharded(pin(banks), pin(xs), pin(keys))
+
+    return constrained
 
 
 def _make_fused(
@@ -217,12 +273,20 @@ def _make_fused(
     guard = PrivacyGuard.from_config(tc.privacy)
     fwd_guarded = banked_client_forward(adapter, guard=guard)
     fwd_plain = banked_client_forward(adapter) if guard.enabled else None
+    shard_trunk = _trunk_sharder(mesh)
     if mesh is not None:
-        assert client_axis in mesh.axis_names, (client_axis, mesh.axis_names)
-        assert tc.n_clients % mesh.shape[client_axis] == 0, (
-            f"n_clients={tc.n_clients} must divide over "
-            f"mesh axis {client_axis}={mesh.shape[client_axis]}"
-        )
+        if client_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} have no {client_axis!r} axis; "
+                f"build the mesh with launch.mesh.make_client_mesh or "
+                f"make_split_mesh"
+            )
+        if tc.n_clients % mesh.shape[client_axis] != 0:
+            raise ValueError(
+                f"n_clients={tc.n_clients} does not divide over mesh axis "
+                f"{client_axis!r} of size {mesh.shape[client_axis]}; the "
+                f"stacked client banks shard their leading axis evenly"
+            )
         fwd_guarded = _shard_banked_forward(fwd_guarded, mesh, client_axis)
         if fwd_plain is not None:
             fwd_plain = _shard_banked_forward(fwd_plain, mesh, client_axis)
@@ -251,6 +315,10 @@ def _make_fused(
 
     def loss_from(client_banks, server_params, xs, ys, noise_keys,
                   guard_noise=None):
+        # tensor-parallel trunk: constrain the unraveled server leaves to
+        # their trunk_specs layout so the matmuls (and their grads) partition
+        # over the model axis; identity off-mesh / on a size-1 model axis
+        server_params = shard_trunk(server_params)
         if guard_noise is not None:  # scan path: pre-drawn release noise
             feats = fwd_plain(client_banks, xs, noise_keys)
             feats = release_noise(feats, guard_noise)
@@ -412,7 +480,8 @@ def make_looped_step(adapter: SplitAdapter, tc: SplitTrainConfig, opt: Optimizer
 
 
 def make_server_bank_runner(adapter: SplitAdapter, opt: Optimizer,
-                            grad_clip: float = 1.0, *, unroll: int = 1):
+                            grad_clip: float = 1.0, *, unroll: int = 1,
+                            mesh: Optional[Mesh] = None):
     """The fused-queue engine's server half: replay a stacked bank of queue
     arrivals as ONE ``lax.scan`` of trunk updates.
 
@@ -440,10 +509,22 @@ def make_server_bank_runner(adapter: SplitAdapter, opt: Optimizer,
     engine interchanges checkpoints and recovery semantics with
     protocol-async, which never invalidates the session's stored state — a
     fit that raises mid-run must leave ``session.state`` readable. The cost
-    is one trunk-sized copy per EPOCH (not per step), noise on this path."""
+    is one trunk-sized copy per EPOCH (not per step), noise on this path.
+
+    ``mesh=`` (a ``make_split_mesh`` grid) makes the replay tensor-parallel:
+    the trunk params AND the optimizer moment trees are constrained to their
+    ``trunk_specs`` layouts on entry, the scan carry keeps those layouts, so
+    every slot's forward/backward matmuls partition over the model axis with
+    an all-gather only at the cut (the banked features stay replicated) and
+    at the logits. The per-slot op sequence is unchanged — a mesh whose
+    model axis has size 1 is the same program, preserving the σ=0 parity
+    contract with ``protocol.SplitServer``."""
+    shard_trunk = _trunk_sharder(mesh)
 
     @jax.jit
     def run_bank(server_params, opt_state, step0, features, labels, valid):
+        server_params = shard_trunk(server_params)
+        opt_state = shard_trunk(opt_state)
         def body(carry, slot):
             params, opt_state, step = carry
             feats, labs, ok = slot
@@ -556,37 +637,68 @@ def make_epoch_runner(
     take = jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0))
     sample_plan = make_sample_plan(tc, steps_per_epoch)
 
+    # The epoch's RNG — the batch-index plan and the hoisted guard-noise
+    # buffer — runs as its OWN jit dispatches, never inlined into the
+    # mesh-partitioned epoch program. Under a multi-axis mesh with
+    # committed-sharded inputs, GSPMD may spatially partition an inlined
+    # threefry in value-changing ways (the legacy non-partitionable
+    # implementation gives no sharding-invariance guarantee), so the scan
+    # runner mirrors the structure that makes the stepwise runner immune:
+    # draw on replicated inputs first, feed the arrays in as operands.
+    _noise_draw_cache = {}  # feat shape -> jitted epoch-noise draw
+
+    def _epoch_noise(state, data_x, step_keys):
+        """Pre-draw the epoch's release noise [T, C, b, ...] — the same
+        per-(step, client) keys the in-body release would fold, so scan and
+        stepwise releases stay bit-identical. Returns None when the buffer
+        would exceed the 64MB fp32 cap (mirrors the _auto_epoch_mode size
+        guard); the keyed in-body path is bit-identical, just slower."""
+        bank0 = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+            state["client_banks"],
+        )
+        x0 = jax.ShapeDtypeStruct(
+            (fused_client_batch(tc),) + tuple(data_x.shape[2:]), data_x.dtype
+        )
+        k0 = jax.ShapeDtypeStruct(step_keys.shape[1:], step_keys.dtype)
+        feat = jax.eval_shape(adapter.client_forward, bank0, x0, k0)
+        epoch_elems = steps_per_epoch * tc.n_clients * int(np.prod(feat.shape))
+        if epoch_elems > (1 << 24):
+            return None
+        draw = _noise_draw_cache.get(feat.shape)
+        if draw is None:
+
+            def step_noise(key):
+                cks = jax.random.split(key, tc.n_clients)
+                gks = guard.keys_for(cks)
+                return jax.vmap(
+                    lambda k: jax.random.normal(k, feat.shape, jnp.float32)
+                )(gks)
+
+            draw = jax.jit(jax.vmap(step_noise))
+            _noise_draw_cache[feat.shape] = draw
+        return draw(step_keys)
+
     @partial(jax.jit, donate_argnums=(0,))
-    def run_epoch_scan(state, data_x, data_y, lens, epoch_key):
-        idx, step_keys = sample_plan(lens, epoch_key)
+    def _run_epoch_scan(state, data_x, data_y, idx, step_keys, guard_noise):
         flat, unravel = ravel_pytree(trainable_of(state))
         banks = state["client_banks"]  # scan-invariant in detached mode
-
-        xs_extra = ()
-        if guard.enabled and guard.sigma > 0.0:
-            # Hoist the epoch's release draws out of the serial scan body:
-            # XLA:CPU runs loop bodies single-threaded, where threefry is
-            # the guard's dominant cost (~4x the batched draw). Same
-            # per-(step, client) keys the in-body release would fold, so
-            # scan and stepwise releases stay bit-identical.
-            bank0 = jax.tree.map(lambda a: a[0], banks)
-            x0 = take(data_x, idx[0])[0]
-            feat = jax.eval_shape(adapter.client_forward, bank0, x0, step_keys[0])
-            epoch_elems = (steps_per_epoch * tc.n_clients
-                           * int(np.prod(feat.shape)))
-            # cap the hoisted buffer at 64MB fp32 (the keyed in-body path
-            # below is bit-identical, just slower per step) — mirrors the
-            # _auto_epoch_mode size guard
-            if epoch_elems <= (1 << 24):
-
-                def step_noise(key):
-                    cks = jax.random.split(key, tc.n_clients)
-                    gks = guard.keys_for(cks)
-                    return jax.vmap(
-                        lambda k: jax.random.normal(k, feat.shape, jnp.float32)
-                    )(gks)
-
-                xs_extra = (jax.vmap(step_noise)(step_keys),)  # [T, C, b, ...]
+        xs_extra = () if guard_noise is None else (guard_noise,)
+        opt0 = state["opt"]
+        if mesh is not None:
+            # The scan carry must NOT inherit the committed trunk-sharded
+            # layout: raveling sharded server leaves into one flat buffer
+            # hands the carry a concatenation-of-shards layout that the SPMD
+            # partitioner miscompiles on multi-axis grids (wrong loss from
+            # step 0, NaN within a few steps on a 4x2 mesh, XLA:CPU). Pin
+            # the carried buffers replicated — bit-exact vs the unsharded
+            # scan — and let loss_from's shard_trunk re-shard the unraveled
+            # leaves inside each step for the tensor-parallel matmuls.
+            rep = NamedSharding(mesh, P())
+            flat = jax.lax.with_sharding_constraint(flat, rep)
+            opt0 = jax.tree.map(
+                lambda a: jax.lax.with_sharding_constraint(a, rep), opt0
+            )
 
         def body(carry, inp):
             fl, opt_state, step = carry
@@ -598,7 +710,7 @@ def make_epoch_runner(
             return (fl, opt_state, step + 1), metrics
 
         (flat, opt_state, step), ms = jax.lax.scan(
-            body, (flat, state["opt"], state["step"]), (idx, step_keys) + xs_extra,
+            body, (flat, opt0, state["step"]), (idx, step_keys) + xs_extra,
             unroll=min(unroll, steps_per_epoch),
         )
         new_state = with_trainable(state, unravel(flat), opt_state)
@@ -609,6 +721,14 @@ def make_epoch_runner(
             state["privacy"], tc.privacy, steps_per_epoch
         )
         return new_state, ms
+
+    def run_epoch_scan(state, data_x, data_y, lens, epoch_key):
+        idx, step_keys = sample_plan(lens, epoch_key)
+        guard_noise = None
+        if guard.enabled and guard.sigma > 0.0:
+            guard_noise = _epoch_noise(state, data_x, step_keys)
+        return _run_epoch_scan(state, data_x, data_y, idx, step_keys,
+                               guard_noise)
 
     @partial(jax.jit, donate_argnums=(0,))
     def step_once(state, data_x, data_y, idx_t, key_t):
@@ -644,13 +764,23 @@ def _epoch_batches(
 def _auto_epoch_mode(shards, tc: SplitTrainConfig) -> str:
     """scan on accelerators; on CPU only while the per-step input volume is
     small enough that XLA:CPU's serial while-loop codegen still wins over
-    per-step dispatch (heavy bodies lose their intra-op parallelism there)."""
+    per-step dispatch (heavy bodies lose their intra-op parallelism there).
+
+    The threshold depends on the host TOPOLOGY, not just the backend: on
+    the default 1-device CPU the crossover sits at 32768 elements, but a
+    forced multi-device topology (the CI mesh job's
+    ``--xla_force_host_platform_device_count=8``) carves the intra-op
+    thread pool per device, shrinking exactly the parallelism stepwise
+    trades on — re-measured there the crossover doubles to 65536 (scan
+    +15% at 65536, parity-within-noise above 131072; methodology in
+    docs/engines.md)."""
     if jax.default_backend() in ("tpu", "gpu"):
         return "scan"
     elems = tc.n_clients * fused_client_batch(tc) * int(
         np.prod(np.asarray(shards[0][0]).shape[1:])
     )
-    return "scan" if elems <= 32768 else "stepwise"
+    threshold = 32768 if len(jax.devices()) == 1 else 65536
+    return "scan" if elems <= threshold else "stepwise"
 
 
 def train_spatio_temporal(

@@ -21,18 +21,77 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
     return jax.make_mesh(tuple(shape), axes)
 
 
-def make_client_mesh(n_devices=None, axis: str = "clients"):
+def _check_divides(n_clients, axis_size: int, axis: str) -> None:
+    """``n_clients`` must divide over the client axis: ``shard_map`` would
+    otherwise fail deep inside the traced step (or GSPMD would silently pad
+    the bank layout) — fail loud at mesh construction instead."""
+    if n_clients is not None and int(n_clients) % int(axis_size) != 0:
+        raise ValueError(
+            f"n_clients={int(n_clients)} does not divide over the "
+            f"{axis!r} mesh axis of size {int(axis_size)}; pick a device "
+            f"count that divides n_clients (the stacked client banks shard "
+            f"their leading axis evenly, one hospital group per device)"
+        )
+
+
+def make_client_mesh(n_devices=None, axis: str = "clients", *, n_clients=None):
     """1-D mesh over the split-learning client axis: each hospital's privacy
     bank (and its slice of the epoch data) lives on its own device. Used by
     ``SplitSession(mesh=...)``; on a 1-device host this is the bit-exact
-    no-op mesh the CPU parity test drives."""
+    no-op mesh the CPU parity test drives.
+
+    ``n_clients``, when given, is validated against the device count up
+    front (the count must divide ``n_clients``) — the alternative is a
+    shape error from inside ``shard_map`` long after the mesh was built."""
     import numpy as np
     from jax.sharding import Mesh
 
     devs = jax.devices()
-    n = len(devs) if n_devices is None else n_devices
-    assert n <= len(devs), (n, len(devs))
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"make_client_mesh: n_devices={n} outside [1, {len(devs)}] "
+            f"available devices"
+        )
+    _check_divides(n_clients, n, axis)
     return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def make_split_mesh(n_clients_axis: int = 1, n_model_axis: int = 1, *,
+                    n_clients=None,
+                    client_axis: str = "clients", model_axis: str = "model"):
+    """2-D ``("clients", "model")`` mesh for the split-learning platform.
+
+    The ``"clients"`` axis shards the canonical stacked client banks (and
+    fleet production) one hospital group per device row; the ``"model"``
+    axis shards the server TRUNK tensor-parallel (Megatron-style column/row
+    alternation — see ``repro.sharding.specs.trunk_specs``). A ``(1, 1)``
+    mesh is the bit-exact no-op every engine is pinned against; ``(N, 1)``
+    is the PR 2 client-axis layout; ``(1, N)`` puts every device on the
+    trunk — the right shape for trunk-heavy workloads (see
+    docs/benchmarks.md, the ``sharded`` block).
+
+    Validates up front: the grid must fit the host's devices, and
+    ``n_clients`` (when given) must divide over the client axis."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    c, m = int(n_clients_axis), int(n_model_axis)
+    if c < 1 or m < 1:
+        raise ValueError(
+            f"make_split_mesh: axis sizes must be >= 1, got ({c}, {m})"
+        )
+    devs = jax.devices()
+    if c * m > len(devs):
+        raise ValueError(
+            f"make_split_mesh: a ({c}, {m}) grid needs {c * m} devices but "
+            f"only {len(devs)} are available (CI simulates 8 with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    _check_divides(n_clients, c, client_axis)
+    return Mesh(
+        np.asarray(devs[: c * m]).reshape(c, m), (client_axis, model_axis)
+    )
 
 
 def make_host_mesh(model: int = 1):

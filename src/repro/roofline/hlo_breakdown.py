@@ -39,6 +39,28 @@ def parse_ops(text: str) -> List[Tuple[str, str, int]]:
     return out
 
 
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+
+def collective_bytes(text: str) -> Dict[str, int]:
+    """Result bytes per collective opcode in an optimized (post-SPMD) HLO
+    dump — the communication term of the roofline. Keys are the base
+    opcodes (async ``-start``/``-done`` forms fold into their base; the
+    ``-done`` half is skipped so a pair isn't double-counted). Feed it
+    ``jit(f).lower(...).compile().as_text()`` so GSPMD has already placed
+    the collectives; the un-partitioned HLO has none."""
+    out: Dict[str, int] = defaultdict(int)
+    for _, opcode, nb in parse_ops(text):
+        for base in _COLLECTIVES:
+            if opcode == base or opcode == base + "-start":
+                out[base] += nb
+            # "-done" intentionally not counted: same transfer as -start
+    return dict(out)
+
+
 def breakdown(text: str, top: int = 20) -> Dict:
     ops = parse_ops(text)
     by_opcode: Dict[str, int] = defaultdict(int)

@@ -37,6 +37,29 @@ DEFAULT_RULES: Dict[str, Axis] = {
 }
 
 
+# Split-learning platform rule table for the 2-D ("clients", "model") grid
+# (``launch.mesh.make_split_mesh``): the stacked client banks and per-client
+# epoch data shard over "clients"; the server trunk's tensor-parallel dims
+# over "model" ("trunk_col" = a column-parallel output dim, "trunk_row" = a
+# row-parallel input dim — the alternation ``specs.trunk_specs`` assigns).
+SPLIT_RULES: Dict[str, Axis] = {
+    "clients": "clients",
+    "batch": None,
+    "trunk_col": "model",
+    "trunk_row": "model",
+    "features": None,        # released cut features are replicated
+}
+
+
+def split_axis_rules(mesh):
+    """``axis_rules(SPLIT_RULES, mesh)`` — scope the split-platform rule
+    table so ``shard(x, "clients", ...)`` annotations resolve on a
+    ``make_split_mesh`` grid (axes missing from the mesh degrade to
+    replication inside ``logical_to_spec``, so the same code runs on the
+    1-D client mesh or none at all)."""
+    return axis_rules(SPLIT_RULES, mesh)
+
+
 def current_rules() -> Optional[Dict[str, Axis]]:
     return getattr(_state, "rules", None)
 

@@ -150,6 +150,61 @@ def tree_shardings(tree, mesh: Mesh, **kw):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
 
 
+def trunk_specs(tree, mesh: Mesh, axis: str = "model"):
+    """PartitionSpec pytree for the split-learning SERVER TRUNK (and any
+    tree mirroring its leaf layout, e.g. optimizer moment trees).
+
+    Megatron-style tensor parallelism over the mesh's ``axis``
+    (``"model"`` on ``launch.mesh.make_split_mesh`` grids): dense stacks
+    alternate column-parallel (even layer index — ``w [din, dout]`` shards
+    ``dout``, ``b`` shards with it) and row-parallel (odd index — ``w``
+    shards ``din``, ``b`` replicated; the partial products reduce with one
+    psum), so the activation between a column/row pair stays sharded and
+    the only gathers left are at the CUT (every model shard consumes the
+    full released features) and at the LOGITS. Conv trunk stages shard
+    their output channels (column-parallel). Dims the axis size does not
+    divide fall back to replication via ``_fit`` — e.g. an ``n_classes=2``
+    head under an 8-way model axis — which is also what makes a
+    ``(1, 1)`` mesh an exact no-op.
+
+    The layer index is read from the leaf's path (the innermost list
+    index), so the rules apply unchanged to ``server`` params, the queue
+    engines' ``{"mu": ..., "nu": ...}`` moment trees, and any other tree
+    that nests the same layers."""
+    if axis not in mesh.axis_names:
+        return jax.tree.map(lambda leaf: P(*([None] * np.ndim(leaf))), tree)
+
+    def spec_of(path, leaf):
+        pstr = _path_str(path)
+        parts = pstr.split("/")
+        name = parts[-1]
+        shape = tuple(np.shape(leaf))
+        idx = 0
+        for p in reversed(parts[:-1]):
+            if p.isdigit():
+                idx = int(p)
+                break
+        if name == "w" and len(shape) == 2:
+            spec = [axis, None] if idx % 2 else [None, axis]
+        elif name == "w" and len(shape) == 4:  # conv [kh, kw, cin, cout]
+            spec = [None, None, None, axis]
+        elif name == "b" and len(shape) == 1:
+            spec = [None] if idx % 2 else [axis]
+        else:
+            spec = [None] * len(shape)
+        return _fit(mesh, shape, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, tree)
+
+
+def trunk_shardings(tree, mesh: Mesh, axis: str = "model"):
+    """``trunk_specs`` as a NamedSharding pytree (for ``jax.device_put`` /
+    jit ``in_shardings`` at session init/restore)."""
+    specs = trunk_specs(tree, mesh, axis=axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def client_bank_specs(tree, mesh: Mesh, axis: str = "clients"):
     """PartitionSpec pytree for a canonical client-banked state fragment:
     every leaf's LEADING dim is the stacked client axis, sharded over

@@ -1,0 +1,169 @@
+"""The 2-D ``("clients", "model")`` mesh: builder validation, 1x1
+bit-exactness, cross-shape trajectory parity, checkpoint portability.
+
+The multi-device sweep needs 8 simulated host devices; the CI ``mesh`` job
+provides them with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+run as its OWN pytest process (conftest.py forbids forcing the count
+in-process), so those tests skip on the default 1-device topology.
+
+Tolerance contract (measured, see docs/api.md "Mesh sharding"):
+
+* ``(1, 1)`` and no-mesh are BIT-IDENTICAL — losses and every state leaf.
+* Pure shapes — ``(8, 1)`` / ``(1, 8)`` — reproduce the unsharded
+  trajectory to fp32 noise (<= ~1e-6 relative on losses).
+* Mixed grids — ``(4, 2)`` / ``(2, 4)`` — partition the loss reductions
+  and the row-parallel trunk psum, so each step reassociates fp32 sums;
+  the per-step drift starts ~1e-5 and is amplified by training (~1e-3
+  after 10 adamw steps on the cholesterol objective). The parity bound
+  below is that amplification with margin, not an engine bug.
+"""
+import numpy as np
+import jax
+import jax.tree_util as tu
+import pytest
+
+from repro.configs.paper_models import CHOLESTEROL_MLP
+from repro.core import SplitSession, SplitTrainConfig
+from repro.core.adapters import mlp_adapter
+from repro.data import make_cholesterol, split_clients
+from repro.launch.mesh import make_client_mesh, make_split_mesh
+from repro.optim import adamw
+from repro.privacy.guard import DPConfig
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the CI mesh job)",
+)
+
+ENGINES = ("fused-scan", "fused-queue", "protocol-async")
+SHAPES = ((8, 1), (4, 2), (2, 4), (1, 8))
+DP = DPConfig(clip_norm=1.0, noise_scale=0.5)
+
+
+@pytest.fixture(scope="module")
+def chol3():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y)
+
+
+@pytest.fixture(scope="module")
+def chol8():
+    x, y = make_cholesterol(800, seed=0)
+    return split_clients(x, y, shares=(0.125,) * 8)
+
+
+def _tc8(privacy=None):
+    return SplitTrainConfig(server_batch=64, n_clients=8,
+                            data_shares=(1.0,) * 8, privacy=privacy)
+
+
+def _fit(shards, tc, engine, mesh, *, epochs=2, steps=3, seed=0):
+    s = SplitSession(mlp_adapter(CHOLESTEROL_MLP), tc, adamw(1e-2),
+                     engine=engine, seed=seed, mesh=mesh)
+    hist = s.fit(shards, epochs=epochs, steps_per_epoch=steps)
+    return s, np.array([h["loss"] for h in hist], np.float64)
+
+
+# ------------------------------------------------------------- validation
+def test_split_mesh_rejects_bad_axis_sizes():
+    with pytest.raises(ValueError, match="axis sizes must be >= 1"):
+        make_split_mesh(0, 1)
+    with pytest.raises(ValueError, match="needs"):
+        make_split_mesh(len(jax.devices()) + 1, 1)
+
+
+def test_split_mesh_default_is_1x1_noop_grid():
+    mesh = make_split_mesh()
+    assert mesh.axis_names == ("clients", "model")
+    assert mesh.shape == {"clients": 1, "model": 1}
+    # n_clients always divides a size-1 client axis
+    make_split_mesh(1, 1, n_clients=7)
+
+
+@needs8
+def test_split_mesh_rejects_nondividing_clients():
+    """Same up-front divisibility contract as make_client_mesh (PR 8): a
+    6-hospital fleet cannot shard its stacked banks over 4 device rows."""
+    with pytest.raises(ValueError, match="does not divide"):
+        make_split_mesh(4, 2, n_clients=6)
+    with pytest.raises(ValueError, match="does not divide"):
+        make_client_mesh(8, n_clients=6)
+    # and the dividing shapes build
+    for c, m in SHAPES:
+        assert make_split_mesh(c, m, n_clients=8).shape == {
+            "clients": c, "model": m}
+
+
+# ------------------------------------------------------- 1x1 bit-exactness
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("privacy", [None, DP], ids=["sigma0", "sigma0.5"])
+def test_1x1_grid_is_bit_exact(chol3, engine, privacy):
+    """The (1, 1) grid is the pinned no-op: same losses, every canonical
+    state leaf array_equal — at sigma=0 AND under the DP guard."""
+    tc = SplitTrainConfig(server_batch=48, privacy=privacy)
+    s0, l0 = _fit(chol3, tc, engine, None)
+    s1, l1 = _fit(chol3, tc, engine, make_split_mesh(1, 1))
+    assert l0.tolist() == l1.tolist()
+    for a, b in zip(tu.tree_leaves(s0.state), tu.tree_leaves(s1.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- cross-shape parity
+def _parity_rtol(engine, shape):
+    if engine == "fused-scan" and 1 not in shape:
+        return 5e-2  # mixed grid: amplified fp32 reassociation (docstring)
+    return 1e-5
+
+
+@needs8
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cross_shape_parity_sigma_pos(chol8, engine):
+    """sigma>0: every mesh shape follows the unsharded trajectory — the
+    guard noise, batch plan, and key schedule are sharding-invariant."""
+    tc = _tc8(privacy=DP)
+    _, base = _fit(chol8, tc, engine, None)
+    for shape in SHAPES:
+        _, got = _fit(chol8, tc, engine, make_split_mesh(*shape))
+        np.testing.assert_allclose(
+            got, base, rtol=_parity_rtol(engine, shape),
+            err_msg=f"{engine} diverged on {shape}")
+
+
+@needs8
+def test_cross_shape_parity_sigma0_fused_scan(chol8):
+    """sigma=0 fused-scan: pure shapes track to fp noise; mixed grids to
+    the documented reassociation bound."""
+    tc = _tc8()
+    _, base = _fit(chol8, tc, "fused-scan", None)
+    for shape in SHAPES:
+        _, got = _fit(chol8, tc, "fused-scan", make_split_mesh(*shape))
+        np.testing.assert_allclose(
+            got, base, rtol=_parity_rtol("fused-scan", shape),
+            err_msg=f"fused-scan diverged on {shape}")
+
+
+# ------------------------------------------- checkpoint across mesh shapes
+@needs8
+@pytest.mark.parametrize("engine", ["fused-scan", "fused-queue"])
+def test_checkpoint_portable_across_shapes(chol8, engine, tmp_path):
+    """Save on one grid, restore on another (and on no mesh at all): the
+    canonical checkpoint is layout-free, so values round-trip exactly and
+    the continued trajectories agree within the parity bound."""
+    tc = _tc8(privacy=DP)
+    src, _ = _fit(chol8, tc, engine, make_split_mesh(4, 2), epochs=1)
+    path = src.save(str(tmp_path / "ckpt"))
+    saved = jax.device_get(src.state)
+
+    continued = {}
+    for tag, mesh in [("2x4", make_split_mesh(2, 4)),
+                      ("none", None)]:
+        dst = SplitSession(mlp_adapter(CHOLESTEROL_MLP), tc, adamw(1e-2),
+                           engine=engine, seed=0, mesh=mesh)
+        dst.restore(path)
+        for a, b in zip(tu.tree_leaves(saved), tu.tree_leaves(dst.state)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                "restore must be value-exact regardless of mesh shape"
+        hist = dst.fit(chol8, epochs=1, steps_per_epoch=3)
+        continued[tag] = np.array([h["loss"] for h in hist], np.float64)
+    np.testing.assert_allclose(continued["2x4"], continued["none"], rtol=5e-2)

@@ -136,11 +136,19 @@ def test_mesh_noop_bitmatches_unsharded_on_cpu(chol_shards):
 
 
 def test_mesh_rejected_by_host_engines(chol_shards):
+    """looped-ref and fedavg are host-loop engines with no device layout to
+    shard; the queue engines accept mesh= since the 2-D grid (the trunk
+    constraints + fleet placement are no-ops on one device)."""
     ad = mlp_adapter(CHOLESTEROL_MLP)
-    for engine in ("looped-ref", "protocol-async", "fedavg"):
+    for engine in ("looped-ref", "fedavg"):
         with pytest.raises(ValueError, match="mesh"):
             SplitSession(ad, UNIFORM, adamw(1e-2), engine=engine,
                          mesh=make_client_mesh(1))
+    # protocol-async validates instead of rejecting: the client axis must
+    # divide n_clients (3 clients cannot spread over a hypothetical 2-row
+    # axis — checked without needing >1 device via a fake axis size)
+    SplitSession(ad, UNIFORM, adamw(1e-2), engine="protocol-async",
+                 mesh=make_client_mesh(1, n_clients=3), threaded=False)
 
 
 def test_e2e_mode_rejected_by_detached_only_engines():

@@ -80,9 +80,9 @@ def test_session_builds_fused_queue_runner_with_unroll_one(monkeypatch):
     captured = {}
     real_make = trainer_mod.make_server_bank_runner
 
-    def spy(adapter, opt, grad_clip=1.0, *, unroll=1):
+    def spy(adapter, opt, grad_clip=1.0, *, unroll=1, mesh=None):
         captured["unroll"] = unroll
-        return real_make(adapter, opt, grad_clip, unroll=unroll)
+        return real_make(adapter, opt, grad_clip, unroll=unroll, mesh=mesh)
 
     monkeypatch.setattr(session_mod, "make_server_bank_runner", spy)
     ad = mlp_adapter(CHOLESTEROL_MLP)
