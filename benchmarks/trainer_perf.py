@@ -549,12 +549,105 @@ def bench_sharded(steps: int = 60, reps: int = 3) -> List[Row]:
     return rows
 
 
+def bench_llm(steps: int = 10, reps: int = 3) -> List[Row]:
+    """The ``llm-split`` engine on the demo-11m transformer (PR 9).
+
+    Three rows, all through ``SplitSession(engine="llm-split")`` on the
+    same 3-hospital token shards (seq 64, per-client batch 2):
+
+      * ``llm_split`` — detached cut, guard off: the baseline the engine
+        pinned bit-exact against the legacy ``make_llm_split_step`` loop.
+      * ``llm_split_guarded`` — the ``PrivacyGuard`` release at the cut
+        (clip + Gaussian mechanism, accountant advancing on device); the
+        delta is the guard's cost on the transformer cut.
+      * ``llm_split_shared_bank`` — ONE shared client bank instead of
+        per-client banks (bit-identical training per the Hypothesis sweep);
+        the delta is the stacked-bank vmap/HBM cost.
+
+    Updates the ``llm`` block of BENCH_trainer.json IN PLACE; every
+    pre-existing row is left untouched.
+
+      PYTHONPATH=src python -m benchmarks.trainer_perf --llm
+    """
+    from repro.configs import get_config
+    from repro.core.distributed import llm_adapter
+    from repro.core.trainer import SplitTrainConfig
+    from repro.data.lm import token_stream, token_windows
+    from repro.models.transformer import ModelOptions
+    from repro.privacy import DPConfig
+
+    cfg = get_config("demo-11m")
+    seq, batch, n_clients = 64, 2, 3
+    opts = ModelOptions(q_block=seq, kv_block=seq)
+    adapter = llm_adapter(cfg, opts, jnp.float32)
+    shares = (0.7, 0.2, 0.1)
+    tc = SplitTrainConfig(n_clients=n_clients, data_shares=shares,
+                          server_batch=n_clients * batch)
+    tc_guard = dataclasses.replace(
+        tc, privacy=DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0))
+    shards = []
+    for c, s in enumerate(shares):
+        stream = token_stream(cfg.vocab_size, max(int(4e4 * s), 8 * seq), seed=c)
+        windows = token_windows(stream, max(16, int(200 * s)), seq, seed=10 + c)
+        shards.append((windows, windows))
+
+    timers = {
+        "llm": _session_epoch_timer(adapter, tc, shards, steps, "llm-split"),
+        "llm_guard": _session_epoch_timer(adapter, tc_guard, shards, steps,
+                                          "llm-split"),
+        "llm_shared": _session_epoch_timer(adapter, tc, shards, steps,
+                                           "llm-split", shared_bank=True),
+    }
+    best = {name: 0.0 for name in timers}
+    order = list(timers)
+    for rep in range(reps):
+        for name in order[rep % len(order):] + order[: rep % len(order)]:
+            best[name] = max(best[name], steps / timers[name]())
+
+    llm_sps, guard_sps, shared_sps = (
+        best["llm"], best["llm_guard"], best["llm_shared"]
+    )
+    guard_overhead_pct = (1.0 - guard_sps / llm_sps) * 100.0
+    _update_bench_json({
+        "llm": {
+            "config": {
+                "model": "demo-11m (dense transformer, untied head, cut=1)",
+                "engine": "llm-split, detached",
+                "seq_len": seq,
+                "per_client_batch": batch,
+                "n_clients": n_clients,
+                "steps_per_epoch": steps,
+                "timing": f"best-of-{reps}",
+                "backend": jax.default_backend(),
+                "guard": "DPConfig(eps=1.0, delta=1e-5, clip=1.0) at the cut",
+            },
+            "llm_steps_per_sec": llm_sps,
+            "llm_guard_steps_per_sec": guard_sps,
+            "llm_shared_bank_steps_per_sec": shared_sps,
+            "guard_overhead_pct": guard_overhead_pct,
+            "shared_bank_speedup": shared_sps / llm_sps,
+        }
+    })
+    return [
+        ("trainer/llm_split_step", 1e6 / llm_sps,
+         f"steps_per_sec={llm_sps:.1f}"),
+        ("trainer/llm_split_step_guarded", 1e6 / guard_sps,
+         f"steps_per_sec={guard_sps:.1f}"
+         f";overhead_vs_guard_off={guard_overhead_pct:.1f}%"),
+        ("trainer/llm_split_step_shared_bank", 1e6 / shared_sps,
+         f"steps_per_sec={shared_sps:.1f}"
+         f";vs_banked={shared_sps / llm_sps:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     if "--degraded" in argv:
         bench = bench_degraded
     elif "--sharded" in argv:
         bench = bench_sharded
+    elif "--llm" in argv:
+        bench = bench_llm
     else:
         bench = bench_fused_vs_looped
     print("name,us_per_call,derived")

@@ -2,12 +2,14 @@
 spatio-temporal split learning (3 hospital clients, detached privacy cut).
 
 This is the assignment's (b) end-to-end deliverable; it shells into the
-production launcher. On CPU expect ~10-30s/step for the 100M preset — use
---arch demo-11m for a fast run.
+production launcher (which runs the ``llm-split`` session engine). On CPU
+expect ~10-30s/step for the 100M preset — use --arch demo-11m for a fast run.
 
   PYTHONPATH=src python examples/train_100m_lm.py --steps 300
+  PYTHONPATH=src python examples/train_100m_lm.py --smoke --arch demo-11m
 """
 import argparse
+import math
 
 from repro.launch.train import main as train_main
 
@@ -18,7 +20,18 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="4-step CI pass: tiny shapes, no checkpoint, "
+                         "asserts the run produced finite losses")
     args = ap.parse_args()
+    if args.smoke:
+        history = train_main([
+            "--arch", args.arch, "--steps", "4", "--batch", "2",
+            "--seq", "16", "--log-every", "2",
+        ])
+        assert history and all(math.isfinite(r["loss"]) for r in history), history
+        print("smoke ok")
+        return
     train_main([
         "--arch", args.arch, "--steps", str(args.steps),
         "--batch", str(args.batch), "--seq", str(args.seq),

@@ -29,6 +29,7 @@ from repro.core.trainer import (
     evaluate_per_client,
     make_epoch_runner,
     make_looped_step,
+    make_sample_plan,
     make_single_client_step,
     make_spatio_temporal_step,
     single_client_config,

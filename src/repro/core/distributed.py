@@ -4,44 +4,148 @@ Integrates the paper's technique as a first-class distributed feature for the
 LLM/SSM/MoE/hybrid model zoo:
 
   * per-client parameter banks (embedding + privacy block) with a leading
-    ``[n_clients]`` dim — sharded over the ``data`` mesh axis in production
-    (each data shard IS a hospital),
+    ``[n_clients]`` dim — sharded over the ``data``/``clients`` mesh axis in
+    production (each data shard IS a hospital),
   * the server trunk (prefix + scanned groups + head) sharded tensor-parallel
     over ``model``,
   * the cut enforced by stop_gradient in ``detached`` mode so the XLA graph
-    provably contains no backward path into client banks.
+    provably contains no backward path into client banks,
+  * a ``repro.privacy.PrivacyGuard`` release at the cut — the standard
+    fold-in key schedule every engine shares — so the features that cross
+    the trust boundary are the guarded release, not the raw activations.
+
+This module is the kernel of the ``"llm-split"`` engine
+(``repro.core.session.LLMSplitEngine``): ``llm_adapter`` wraps a transformer
+config as a :class:`~repro.core.adapters.SplitAdapter` for the session's
+evaluate/audit surfaces, ``init_llm_state``/``make_guarded_llm_step`` build
+the canonical state and the guarded step the engine jits. The pre-session
+entry points ``make_llm_split_step``/``init_split_state`` remain as
+``DeprecationWarning`` shims delegating here (same math — the guarded step
+at ``privacy=None`` is bit-exact with the legacy step).
 
 Note: multi-client split learning requires an UNTIED head — a tied embedding
 table would hand every client's embedding to the server, violating the trust
-boundary. ``make_llm_split_step`` unties automatically.
+boundary. The state init and the step factory untie automatically.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import warnings
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.adapters import SplitAdapter
+from repro.core.trainer import _trunk_sharder
 from repro.models import transformer
 from repro.models.layers import softmax_cross_entropy
 from repro.models.model import MOE_AUX_WEIGHT
 from repro.models.transformer import ModelOptions
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.privacy.accountant import budget_advance, budget_init
+from repro.privacy.guard import DPConfig, PrivacyGuard
 
 
 def untie(cfg: ModelConfig) -> ModelConfig:
     return dataclasses.replace(cfg, tie_embeddings=False) if cfg.tie_embeddings else cfg
 
 
-def init_split_state(key, cfg: ModelConfig, n_clients: int, opt: Optimizer,
-                     dtype=None, shared_bank: bool = False, mode: str = "detached"):
-    """``shared_bank=True`` keeps ONE client parameter set instead of
-    per-client banks. In detached mode the privacy layers are frozen, so
-    identically-initialized banks are mathematically one bank — this sheds
-    the n_clients x (embedding + cut block) HBM duplication. (Per-client
-    noise keys still differ, so transmitted features remain client-unique.)"""
+@dataclasses.dataclass(frozen=True)
+class LLMSplitAdapter(SplitAdapter):
+    """A :class:`SplitAdapter` that also carries the transformer config —
+    the ``llm-split`` engine reads ``cfg``/``opts``/``dtype`` from it, so one
+    adapter argument configures both the session surfaces (evaluate / audit)
+    and the engine's own step factory. Frozen ⇒ hashable ⇒ usable as the
+    static arg of the shared jitted eval forward."""
+
+    cfg: Optional[ModelConfig] = None
+    opts: ModelOptions = ModelOptions()
+    dtype: Any = None
+
+
+def llm_adapter(cfg: ModelConfig, opts: ModelOptions = ModelOptions(),
+                dtype=None) -> LLMSplitAdapter:
+    """Adapter over ``models.transformer`` for the ``llm-split`` engine.
+
+    ``client_forward`` dispatches on the input dtype: integer inputs are
+    token batches and run the full hospital side (embedding + privacy blocks
+    + cut); FLOAT inputs are treated as pre-embedded states ``[B, S, d]``
+    and run the privacy blocks + cut only. The float path is the inversion
+    surface ``session.audit_privacy()`` optimizes over — the attack
+    reconstructs the post-embedding representation, which is exactly what
+    the untied-head trust argument says the server must never recover.
+    """
+    cfg = untie(cfg)
+
+    def client_forward(client_params, x, noise_key=None):
+        x = jnp.asarray(x)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            h, _, _ = transformer.client_forward(
+                client_params, cfg, {"tokens": x}, opts, noise_key
+            )
+            return h
+        # pre-embedded float state: privacy blocks + cut from h directly
+        h = x
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        for i, blk in enumerate(client_params["blocks"]):
+            h, _ = transformer.apply_block(blk, cfg, i, h, positions, opts)
+        return transformer.privacy_cut(cfg, h, opts, noise_key)
+
+    def server_forward(server_params, feats):
+        B, S = feats.shape[:2]
+        # positions are a pure function of shape — recomputed server-side
+        # (bit-identical ints), so only the released features cross the cut
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        logits, _aux = transformer.server_forward(server_params, cfg, feats, positions, opts)
+        return logits
+
+    def _shift(logits, labels):
+        if cfg.is_encoder_only:
+            return logits, labels
+        return logits[:, :-1], labels[:, 1:]
+
+    def loss(logits, labels):
+        lg, lb = _shift(logits, labels)
+        return softmax_cross_entropy(lg, lb)
+
+    def metrics(logits, labels):
+        lg, lb = _shift(logits, labels)
+        pred = jnp.argmax(lg, axis=-1)
+        return {
+            "loss": softmax_cross_entropy(lg, lb),
+            "accuracy": jnp.mean((pred == lb).astype(jnp.float32)),
+        }
+
+    return LLMSplitAdapter(
+        name=cfg.name,
+        init=lambda key: transformer.init_params(key, cfg, dtype),
+        client_forward=client_forward,
+        server_forward=server_forward,
+        loss=loss,
+        metrics=metrics,
+        cfg=cfg,
+        opts=opts,
+        dtype=dtype,
+    )
+
+
+def init_llm_state(key, cfg: ModelConfig, n_clients: int, opt: Optimizer,
+                   dtype=None, shared_bank: bool = False, mode: str = "detached"):
+    """Canonical-contract state for the LM split workload.
+
+    ``shared_bank=True`` keeps ONE client parameter set instead of per-client
+    banks. In detached mode the privacy layers are frozen, so identically-
+    initialized banks are mathematically one bank — this sheds the
+    n_clients x (embedding + cut block) HBM duplication. (Per-client noise
+    keys still differ, so transmitted features remain client-unique.)
+
+    Same parameter math as the legacy ``init_split_state`` (that shim
+    delegates here), plus the accountant's ``"privacy"`` budget leaves the
+    canonical ``SplitSession`` contract carries.
+    """
     cfg = untie(cfg)
     ks = jax.random.split(key, n_clients + 1)
     ref = transformer.init_params(ks[0], cfg, dtype)
@@ -58,44 +162,67 @@ def init_split_state(key, cfg: ModelConfig, n_clients: int, opt: Optimizer,
         "server": server,
         "opt": opt.init(trainable),
         "step": jnp.zeros((), jnp.int32),
+        "privacy": budget_init(),
     }
 
 
-def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
-                        n_clients: int, clip_norm: float = 1.0,
-                        shared_bank: bool = False, mode: str = "detached"):
-    """Returns jit-able ``step(state, batch, rng)``.
+def make_guarded_llm_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
+                          n_clients: int, *, grad_clip: float = 1.0,
+                          privacy: Optional[DPConfig] = None,
+                          shared_bank: bool = False, mode: str = "detached",
+                          mesh=None):
+    """Returns jit-able ``step(state, batch, rng)`` with a ``PrivacyGuard``
+    release at the cut.
 
     batch: {"tokens": [C, b, S], "labels": [C, b, S]} — one sub-batch per
     client. The client banks run under vmap (⇒ per-shard in production);
     features concatenate into the server batch (the queue's steady state).
+    The guard releases each client's feature map on the standard fold-in
+    schedule — ``guard.key_for(noise_keys[c])``, the same derivation every
+    other engine uses — and the step advances the accountant's ``"privacy"``
+    leaves when the guard is on. ``privacy=None`` compiles the guard away
+    (the guard-off path is bit-exact with the legacy unguarded step).
 
     ``mode="detached"`` is the paper's temporal split (no grads into client
     banks); ``mode="e2e"`` is classic split learning — gradients return to
     the clients each step (ablation: what the temporal split costs/buys).
+    ``mesh=`` (a ``make_split_mesh`` grid) constrains the server trunk
+    tensor-parallel over its ``"model"`` axis inside the loss — identity on
+    a 1-sized (or absent) model axis, so small grids stay bit-exact.
     """
     cfg = untie(cfg)
     e2e = mode == "e2e"
     if e2e:
         opts = dataclasses.replace(opts, detach_cut=False)
-        assert not shared_bank, "e2e clients train independently; banks must be per-client"
+        if shared_bank:
+            raise ValueError(
+                "e2e clients train independently; banks must be per-client"
+            )
     else:
-        assert opts.detach_cut, "detached trainer requires detach_cut"
+        if not opts.detach_cut:
+            raise ValueError("detached trainer requires detach_cut")
+    guard = PrivacyGuard.from_config(privacy)
+    shard_trunk = _trunk_sharder(mesh)
 
     def loss_fn(server_params, client_banks, batch, rng):
+        server_params = shard_trunk(server_params)
         noise_keys = jax.random.split(rng, n_clients)
         inputs = {k: v for k, v in batch.items() if k != "labels"}
-        feats, positions, _aux = jax.vmap(
+        feats, _positions, _aux = jax.vmap(
             lambda cp, bt, nk: transformer.client_forward(cp, cfg, bt, opts, nk),
             in_axes=(None if shared_bank else 0, 0, 0),
         )(client_banks, inputs, noise_keys)
+        if guard.enabled:
+            # the release at the cut, vmapped over clients on the standard
+            # fold-in schedule (identical draws to the looped/fused engines)
+            feats = jax.vmap(lambda k, f: guard(guard.key_for(k), f))(noise_keys, feats)
         C, b, S, d = feats.shape
         h = feats.reshape(C * b, S, d)  # concatenate all features (Alg.1 l.11)
-        pos = positions.reshape(C * b, S)
+        # positions are a pure function of shape; recomputing them here
+        # (bit-identical ints) keeps the released features the ONLY client
+        # output that reaches the server call
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (C * b, S))
         labels = batch["labels"].reshape(C * b, -1)
-        # KNOWN GAP (splitlint SPL101, baselined): the LM cut crosses to the
-        # server without a PrivacyGuard release. ROADMAP tracks folding this
-        # trainer into SplitSession, which owns the guard at the cut.
         logits, aux = transformer.server_forward(server_params, cfg, h, pos, opts)
         if cfg.is_encoder_only:
             ce = softmax_cross_entropy(logits, labels)
@@ -111,7 +238,7 @@ def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
 
             trainable = {"server": state["server"], "client_banks": state["client_banks"]}
             (loss, ce), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
-            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
             updates, new_opt = opt.update(grads, state["opt"], trainable, state["step"])
             new_trainable = apply_updates(trainable, updates)
             new_state = {
@@ -125,7 +252,7 @@ def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
             (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 state["server"], state["client_banks"], batch, rng
             )
-            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
             updates, new_opt = opt.update(grads, state["opt"], state["server"], state["step"])
             new_state = {
                 **state,
@@ -133,6 +260,45 @@ def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
                 "opt": new_opt,
                 "step": state["step"] + 1,
             }
+        if guard.enabled and "privacy" in state:
+            # one release per client per step; the budget leaf composes the
+            # worst-case client (every client released once this step)
+            new_state["privacy"] = budget_advance(state["privacy"], privacy)
         return new_state, {"loss": loss, "ce": ce, "grad_norm": gnorm}
 
     return step
+
+
+# ----------------------------------------------------------- legacy shims
+def init_split_state(key, cfg: ModelConfig, n_clients: int, opt: Optimizer,
+                     dtype=None, shared_bank: bool = False, mode: str = "detached"):
+    """DEPRECATED: use ``init_llm_state`` (or ``SplitSession`` with
+    ``engine="llm-split"``, which owns its state). Same parameters
+    bit-exactly; the legacy shape simply lacks the ``"privacy"`` leaves."""
+    warnings.warn(
+        "init_split_state is deprecated; use init_llm_state (or "
+        "SplitSession(engine='llm-split'), which carries the privacy budget "
+        "in its canonical state)",
+        DeprecationWarning, stacklevel=2,
+    )
+    state = init_llm_state(key, cfg, n_clients, opt, dtype=dtype,
+                           shared_bank=shared_bank, mode=mode)
+    return {k: v for k, v in state.items() if k != "privacy"}
+
+
+def make_llm_split_step(cfg: ModelConfig, opts: ModelOptions, opt: Optimizer,
+                        n_clients: int, clip_norm: float = 1.0,
+                        shared_bank: bool = False, mode: str = "detached"):
+    """DEPRECATED: use ``make_guarded_llm_step`` (or ``SplitSession`` with
+    ``engine="llm-split"``). Delegates with the guard off — the returned
+    step is the same function the engine jits at ``privacy=None``, so the
+    legacy numbers are reproduced bit-exactly."""
+    warnings.warn(
+        "make_llm_split_step is deprecated; use make_guarded_llm_step (or "
+        "SplitSession(engine='llm-split'), which applies the PrivacyGuard "
+        "at the cut)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return make_guarded_llm_step(cfg, opts, opt, n_clients,
+                                 grad_clip=clip_norm, privacy=None,
+                                 shared_bank=shared_bank, mode=mode)

@@ -68,6 +68,7 @@ from repro.checkpoint.io import load_checkpoint, save_checkpoint
 from repro.core import fedavg as fedavg_mod
 from repro.core import protocol as protocol_mod
 from repro.core.adapters import SplitAdapter
+from repro.core.distributed import LLMSplitAdapter, init_llm_state, make_guarded_llm_step
 from repro.core.faults import ClientLoopError, FaultPlan
 from repro.core.queue import FeatureBank, FeatureQueue
 from repro.core.trainer import (
@@ -790,6 +791,157 @@ class FedAvgEngine:
             "round": int(canonical["step"]),
             "privacy": canonical["privacy"],
         }
+
+
+# ---------------------------------------------------------------- llm-split
+_take_client_batch = jax.jit(jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0)))
+
+
+@register_engine("llm-split")
+class LLMSplitEngine:
+    """The LM split workload (``core.distributed``) behind the session
+    surface: per-client banks = embedding + privacy block(s), the server
+    trunk = the remaining transformer stack with an UNTIED head. Shards are
+    per-client ``(windows, windows)`` pairs of ``[N, S]`` int32 token
+    windows (labels == tokens; the shift happens in the loss), sampled by
+    the same on-device plan as the fused engines, so its key schedule is
+    the standard one: ``fold_in(root, epochs_done)`` per epoch, per-step
+    keys from the plan, per-client noise keys split inside the step, and
+    the guard's release on ``fold_in(noise_key, GUARD_KEY_FOLD)``.
+
+    ``shared_bank=True`` keeps ONE bank (no leading client dim) in the
+    native state — in detached mode identically-initialized frozen banks
+    are mathematically one bank; canonical conversion broadcasts to the
+    stacked ``[n_clients, ...]`` layout losslessly (and back via ``[0]``).
+    ``mode="e2e"`` (classic split learning — grads return to the clients)
+    trains per-client banks and therefore rejects ``shared_bank``.
+
+    ``mesh=`` places the 2-D ``("clients", "model")`` grid: banks + epoch
+    data shard over ``"clients"``, the trunk tensor-parallel over
+    ``"model"`` via ``trunk_specs`` (the transformer rules: QKV/FFN-up
+    column-parallel, O/FFN-down row-parallel, the untied head
+    vocab-sharded, scanned groups keep their leading group dim). A 1x1
+    grid is a bit-exact no-op like every other engine."""
+
+    name = "llm-split"
+
+    def __init__(self, adapter: SplitAdapter, tc: SplitTrainConfig,
+                 opt: Optimizer, *, mesh: Optional[Mesh] = None,
+                 shared_bank: bool = False):
+        if not isinstance(adapter, LLMSplitAdapter) or adapter.cfg is None:
+            raise ValueError(
+                "llm-split needs an adapter built by "
+                "repro.core.distributed.llm_adapter(cfg, opts) — it carries "
+                "the transformer config the engine's step factory reads"
+            )
+        if tc.mode not in ("detached", "e2e"):
+            raise ValueError(f"unknown mode {tc.mode!r}")
+        if (mesh is not None and CLIENT_AXIS in mesh.axis_names
+                and tc.n_clients % mesh.shape[CLIENT_AXIS] != 0):
+            raise ValueError(
+                f"n_clients={tc.n_clients} does not divide over mesh axis "
+                f"{CLIENT_AXIS!r} of size {mesh.shape[CLIENT_AXIS]}; the "
+                f"stacked client banks shard their leading axis evenly"
+            )
+        self.adapter, self.tc, self.opt = adapter, tc, opt
+        self.mesh, self.shared_bank = mesh, shared_bank
+        # evaluate() scores one bank and replicates the row when shared
+        self.identical_banks = shared_bank
+        self.guard = PrivacyGuard.from_config(tc.privacy)
+        # raises at construction for e2e + shared_bank
+        step = make_guarded_llm_step(
+            adapter.cfg, adapter.opts, opt, tc.n_clients,
+            grad_clip=tc.grad_clip, privacy=tc.privacy,
+            shared_bank=shared_bank, mode=tc.mode, mesh=mesh,
+        )
+        self._step = jax.jit(step, donate_argnums=(0,))
+        self._plans: Dict[int, Callable] = {}
+        self._epochs_done = 0
+
+    def init(self, key):
+        self._root = key
+        self._epochs_done = 0
+        return init_llm_state(
+            key, self.adapter.cfg, self.tc.n_clients, self.opt,
+            dtype=self.adapter.dtype, shared_bank=self.shared_bank,
+            mode=self.tc.mode,
+        )
+
+    def _place(self, state, data_x, data_y):
+        """Same placement discipline as the fused engines: bank + data
+        leading axes over ``"clients"``, the trunk pre-placed in its
+        ``trunk_specs`` layout when the model axis is real (the in-step
+        constraint would reshard it anyway; placing once avoids a per-epoch
+        host-layout transfer). A shared bank has no client axis — it stays
+        replicated, which is its correct layout."""
+        if self.mesh is None:
+            return state, data_x, data_y
+        from repro.core.trainer import MODEL_AXIS
+        from repro.sharding.specs import client_bank_specs, trunk_shardings
+
+        if not self.shared_bank and CLIENT_AXIS in self.mesh.axis_names:
+            specs = client_bank_specs(state["client_banks"], self.mesh, CLIENT_AXIS)
+            banks = jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+                state["client_banks"], specs,
+            )
+            state = {**state, "client_banks": banks}
+        if (MODEL_AXIS in self.mesh.axis_names
+                and self.mesh.shape[MODEL_AXIS] > 1):
+            state = {**state, "server": jax.device_put(
+                state["server"], trunk_shardings(state["server"], self.mesh)
+            )}
+        if CLIENT_AXIS in self.mesh.axis_names:
+            data_sh = NamedSharding(self.mesh, P(CLIENT_AXIS))
+            data_x = jax.device_put(data_x, data_sh)
+            data_y = jax.device_put(data_y, data_sh)
+        return state, data_x, data_y
+
+    def run(self, state, shards, *, epochs, steps_per_epoch, eval_fn=None):
+        assert len(shards) == self.tc.n_clients
+        plan = self._plans.setdefault(
+            steps_per_epoch, make_sample_plan(self.tc, steps_per_epoch)
+        )
+        data_x, data_y, lens = device_put_shards(shards)
+        state, data_x, data_y = self._place(state, data_x, data_y)
+        history = []
+        for ep in range(epochs):
+            self._epochs_done += 1
+            idx, step_keys = plan(
+                lens, jax.random.fold_in(self._root, self._epochs_done)
+            )
+            ms = []
+            for t in range(steps_per_epoch):
+                batch = {
+                    "tokens": _take_client_batch(data_x, idx[t]),
+                    "labels": _take_client_batch(data_y, idx[t]),
+                }
+                state, m = self._step(state, batch, step_keys[t])
+                ms.append(m)
+            ms = jax.device_get(ms)  # single readout per epoch
+            rec = {k: float(np.mean([m[k] for m in ms])) for k in ms[0]}
+            rec["epoch"] = ep
+            if eval_fn is not None:
+                rec.update({f"val_{k}": v
+                            for k, v in eval_fn(self.to_canonical(state)).items()})
+            history.append(rec)
+        return state, history
+
+    def to_canonical(self, state):
+        if not self.shared_bank:
+            return state
+        n = self.tc.n_clients
+        banks = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+            state["client_banks"],
+        )
+        return {**state, "client_banks": banks}
+
+    def from_canonical(self, canonical):
+        if not self.shared_bank:
+            return canonical
+        return {**canonical,
+                "client_banks": jax.tree.map(lambda a: a[0], canonical["client_banks"])}
 
 
 # ------------------------------------------------------------------ session

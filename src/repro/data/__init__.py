@@ -1,3 +1,3 @@
 from repro.data.synthetic import MURA_BODY_PARTS, make_cholesterol, make_covid_ct, make_mura
-from repro.data.lm import lm_batches, token_stream
+from repro.data.lm import lm_batches, token_stream, token_windows
 from repro.data.split import split_clients, train_val_test_split

@@ -26,6 +26,23 @@ def token_stream(vocab_size: int, n_tokens: int, seed: int = 0) -> np.ndarray:
     return out.astype(np.int32)
 
 
+def token_windows(
+    stream: np.ndarray, n_windows: int, seq_len: int, seed: int = 0
+) -> np.ndarray:
+    """A fixed ``[n_windows, seq_len]`` int32 window set sampled from the
+    stream — the per-client shard format the ``llm-split`` engine consumes
+    (``shards = [(w, w), ...]``; labels == tokens, the shift happens in the
+    loss). Deterministic per (stream, seed): each hospital draws its own
+    windows from its own stream without coordinating with the others."""
+    rng = np.random.default_rng(seed)
+    max_start = len(stream) - seq_len - 1
+    if max_start <= 0:
+        raise ValueError(f"stream of {len(stream)} tokens is too short for "
+                         f"seq_len={seq_len}")
+    starts = rng.integers(0, max_start, size=n_windows)
+    return np.stack([stream[s : s + seq_len] for s in starts]).astype(np.int32)
+
+
 def lm_batches(
     stream: np.ndarray, batch: int, seq_len: int, seed: int = 0
 ) -> Iterator[Dict[str, np.ndarray]]:

@@ -63,12 +63,12 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
     assert shape.global_batch % C == 0, (shape.global_batch, C)
     b = shape.global_batch // C
     opt = adamw(3e-4, weight_decay=0.1)
-    step_fn = distributed.make_llm_split_step(
+    step_fn = distributed.make_guarded_llm_step(
         ucfg, opts, opt, n_clients=C, shared_bank=shared_bank
     )
 
     def init(key):
-        return distributed.init_split_state(key, cfg, C, opt, shared_bank=shared_bank)
+        return distributed.init_llm_state(key, cfg, C, opt, shared_bank=shared_bank)
 
     state_shapes = jax.eval_shape(init, jax.ShapeDtypeStruct((2,), jnp.uint32))
 
@@ -86,6 +86,8 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
         "server": specs_lib.tree_specs(state_shapes["server"], mesh),
         "opt": specs_lib.tree_specs(state_shapes["opt"], mesh, zero1=zero1),
         "step": P(),
+        # the accountant's scalar budget leaves replicate everywhere
+        "privacy": jax.tree.map(lambda _: P(), state_shapes["privacy"]),
     }
     batch_sp = specs_lib.batch_specs(batch_shapes, mesh)
 

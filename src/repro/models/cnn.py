@@ -152,4 +152,6 @@ def forward(params, cfg: CNNConfig, x, noise_key=None, detach_cut=True):
     fmap = client_forward(params, cfg, x, noise_key)
     if detach_cut:
         fmap = jax.lax.stop_gradient(fmap)
-    return server_forward(params, cfg, fmap)
+    # whole-model convenience for single-trust-domain use; split
+    # deployments go through SplitSession, which guards the cut
+    return server_forward(params, cfg, fmap)  # splitlint: ignore[SPL101]

@@ -38,4 +38,6 @@ def forward(params, cfg: MLPConfig, x, noise_key=None, detach_cut=True):
     h = client_forward(params, cfg, x, noise_key)
     if detach_cut:
         h = jax.lax.stop_gradient(h)
-    return server_forward(params, cfg, h)
+    # whole-model convenience for single-trust-domain use; split
+    # deployments go through SplitSession, which guards the cut
+    return server_forward(params, cfg, h)  # splitlint: ignore[SPL101]

@@ -286,7 +286,9 @@ def forward(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full forward (train/prefill). Returns (logits [B,S,V], moe_aux)."""
     h, positions, aux_c = client_forward(params["client"], cfg, batch, opts, noise_key)
-    logits, aux_s = server_forward(
+    # whole-model convenience for single-trust-domain use; split
+    # deployments go through SplitSession, which guards the cut
+    logits, aux_s = server_forward(  # splitlint: ignore[SPL101]
         params["server"], cfg, h, positions, opts,
         tied_embed=params["client"]["embed"] if cfg.tie_embeddings else None,
     )

@@ -69,6 +69,15 @@ _RULES = {
 }
 
 
+# Leaf names trunk_specs delegates to _RULES (the transformer trunk's
+# tensor-parallel set; everything else in a trunk tree is norm scales /
+# router tables / conv stems, which replicate)
+_TRUNK_TP_NAMES = frozenset({
+    "lm_head", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+    "w_gate", "w_up", "w_down", "in_proj_u", "in_proj_z",
+})
+
+
 def _path_str(path) -> str:
     return "/".join(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path)
 
@@ -170,7 +179,15 @@ def trunk_specs(tree, mesh: Mesh, axis: str = "model"):
     The layer index is read from the leaf's path (the innermost list
     index), so the rules apply unchanged to ``server`` params, the queue
     engines' ``{"mu": ..., "nu": ...}`` moment trees, and any other tree
-    that nests the same layers."""
+    that nests the same layers.
+
+    Transformer trunks (the ``llm-split`` engine's server side) shard by
+    leaf NAME via the production ``_RULES`` — QKV/FFN-up/SSM-in column
+    parallel, O/FFN-down/SSM-out row parallel (the Megatron pairing the
+    dense alternation generalizes), per-head biases with their projection,
+    the untied ``lm_head`` vocab-sharded. Leaves under a ``groups`` path
+    (the scanned layer stacks) keep their leading group dim replicated and
+    shard the per-layer dims behind it."""
     if axis not in mesh.axis_names:
         return jax.tree.map(lambda leaf: P(*([None] * np.ndim(leaf))), tree)
 
@@ -179,17 +196,24 @@ def trunk_specs(tree, mesh: Mesh, axis: str = "model"):
         parts = pstr.split("/")
         name = parts[-1]
         shape = tuple(np.shape(leaf))
+        prepend = 1 if "groups" in parts else 0
+        core = shape[prepend:]
         idx = 0
         for p in reversed(parts[:-1]):
             if p.isdigit():
                 idx = int(p)
                 break
+        rule = _RULES.get(name) if name in _TRUNK_TP_NAMES else None
         if name == "w" and len(shape) == 2:
             spec = [axis, None] if idx % 2 else [None, axis]
         elif name == "w" and len(shape) == 4:  # conv [kh, kw, cin, cout]
             spec = [None, None, None, axis]
         elif name == "b" and len(shape) == 1:
             spec = [None] if idx % 2 else [axis]
+        elif rule is not None and len(rule(core)) == len(core):
+            spec = [None] * prepend + [
+                axis if a == "model" else None for a in rule(core)
+            ]
         else:
             spec = [None] * len(shape)
         return _fit(mesh, shape, spec)

@@ -1,0 +1,377 @@
+"""Differential harness for the ``llm-split`` engine (PR 9 tentpole).
+
+The refactor's contract is that registering the LM split workload behind
+``SplitSession`` changes no numbers, so every test here is differential:
+
+  * the engine's ``fit`` pinned BIT-EXACT against the legacy
+    ``make_llm_split_step`` / ``init_split_state`` loop at σ=0 guard-off,
+  * a jaxpr-level proof that ``detached`` mode's XLA graph has no backward
+    path into the client banks (every bank leaf is an input→output
+    pass-through Var), with ``e2e`` as the negative control,
+  * guard-on parity of the fold-in key schedule — the engine's release
+    noise reproduced leaf-exactly by the documented formula
+    ``feats + σ · N(fold_in(noise_key, GUARD_KEY_FOLD))``,
+  * checkpoint round-trip with the UNTIED head (auto-untied from a tied
+    config) plus same-seed resume parity,
+  * a Hypothesis sweep asserting ``shared_bank=True`` ≡ identically
+    initialized per-client banks across client counts and seeds.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    SplitSession,
+    SplitTrainConfig,
+    available_engines,
+    device_put_shards,
+    make_sample_plan,
+)
+from repro.core.distributed import (
+    init_llm_state,
+    init_split_state,
+    llm_adapter,
+    make_guarded_llm_step,
+    make_llm_split_step,
+)
+from repro.models import transformer
+from repro.models.layers import softmax_cross_entropy
+from repro.models.model import MOE_AUX_WEIGHT
+from repro.models.transformer import ModelOptions
+from repro.optim import adamw
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+from repro.privacy import DPConfig
+from repro.privacy.guard import GUARD_KEY_FOLD
+
+TINY = ModelConfig(
+    name="llm-tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=97, dtype="float32", cut_layers=1,
+    privacy_noise=0.02,
+)
+OPTS = ModelOptions(q_block=8, kv_block=8)
+TC = SplitTrainConfig(n_clients=3, data_shares=(0.7, 0.2, 0.1), server_batch=6)
+SEQ = 8
+
+
+def tiny_shards(n_clients=3, seed=0, sizes=(24, 16, 12)):
+    rng = np.random.default_rng(seed)
+    return [
+        (w, w)
+        for w in (
+            rng.integers(0, TINY.vocab_size, (n, SEQ)).astype(np.int32)
+            for n in sizes[:n_clients]
+        )
+    ]
+
+
+def leafdict(tree):
+    return {
+        jax.tree_util.keystr(p): np.asarray(jax.device_get(v))
+        for p, v in jax.tree_util.tree_leaves_with_path(tree)
+    }
+
+
+def assert_trees_bit_equal(a, b, *, only=None, skip=None):
+    la, lb = leafdict(a), leafdict(b)
+    keys = [k for k in la if (only is None or only in k)
+            and (skip is None or skip not in k)]
+    assert keys, "empty leaf comparison"
+    bad = [k for k in keys if not np.array_equal(la[k], lb[k])]
+    assert not bad, f"leaves differ bit-wise: {bad}"
+
+
+def legacy_reference_fit(tc, shards, *, seed, epochs, steps_per_epoch,
+                         step_factory=None, init_fn=None):
+    """The pre-session training loop, verbatim: legacy step + legacy state,
+    driven by the session's own sample plan / key schedule."""
+    root = jax.random.PRNGKey(seed)
+    opt = adamw(1e-3)
+    if step_factory is None:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            step = make_llm_split_step(TINY, OPTS, opt, tc.n_clients,
+                                       clip_norm=tc.grad_clip, mode=tc.mode)
+            state = init_split_state(root, TINY, tc.n_clients, opt,
+                                     jnp.float32, mode=tc.mode)
+    else:
+        step = step_factory(opt)
+        state = init_fn(root, opt)
+    step = jax.jit(step)
+    plan = make_sample_plan(tc, steps_per_epoch)
+    take = jax.jit(jax.vmap(lambda d, ix: jnp.take(d, ix, axis=0)))
+    data_x, data_y, lens = device_put_shards(shards)
+    for ep in range(1, epochs + 1):
+        idx, step_keys = plan(lens, jax.random.fold_in(root, ep))
+        for t in range(steps_per_epoch):
+            batch = {"tokens": take(data_x, idx[t]),
+                     "labels": take(data_y, idx[t])}
+            state, _ = step(state, batch, step_keys[t])
+    return state
+
+
+def make_session(tc=TC, *, seed=0, cfg=TINY, **opts):
+    return SplitSession(llm_adapter(cfg, OPTS, jnp.float32), tc, adamw(1e-3),
+                        engine="llm-split", seed=seed, **opts)
+
+
+# --------------------------------------------------------------- registry
+def test_llm_split_is_registered():
+    assert "llm-split" in available_engines()
+
+
+def test_engine_rejects_bare_adapter():
+    from repro.configs.paper_models import CHOLESTEROL_MLP
+    from repro.core.adapters import mlp_adapter
+
+    with pytest.raises(ValueError, match="llm_adapter"):
+        SplitSession(mlp_adapter(CHOLESTEROL_MLP), TC, adamw(1e-3),
+                     engine="llm-split")
+
+
+def test_e2e_shared_bank_rejected():
+    with pytest.raises(ValueError, match="per-client"):
+        make_session(dataclasses.replace(TC, mode="e2e"), shared_bank=True)
+
+
+# ---------------------------------------------- σ=0 differential (headline)
+@pytest.mark.parametrize("mode", ["detached", "e2e"])
+def test_fit_bit_exact_vs_legacy_step(mode):
+    """`SplitSession(engine="llm-split").fit` reproduces the legacy
+    `make_llm_split_step`/`init_split_state` loop bit-exactly on EVERY state
+    leaf at σ=0 guard-off — the refactor changes no numbers."""
+    tc = dataclasses.replace(TC, mode=mode)
+    shards = tiny_shards()
+    session = make_session(tc, seed=0)
+    history = session.fit(shards, epochs=2, steps_per_epoch=3)
+    assert len(history) == 2 and np.isfinite(history[-1]["loss"])
+
+    ref = legacy_reference_fit(tc, shards, seed=0, epochs=2, steps_per_epoch=3)
+    got = {k: v for k, v in session.state.items() if k != "privacy"}
+    assert_trees_bit_equal(got, ref)
+    # guard-off: the budget leaves exist but never advance
+    assert int(session.state["privacy"]["releases"]) == 0
+
+
+def test_guard_off_step_is_legacy_step():
+    """`make_guarded_llm_step(privacy=None)` and the deprecated
+    `make_llm_split_step` produce bit-identical updates from the same state
+    (the shim's delegation-equivalence contract)."""
+    opt = adamw(1e-3)
+    new_step = jax.jit(make_guarded_llm_step(TINY, OPTS, opt, 3, grad_clip=1.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old_step = jax.jit(make_llm_split_step(TINY, OPTS, opt, 3))
+        state_old = init_split_state(jax.random.PRNGKey(7), TINY, 3, opt,
+                                     jnp.float32)
+    state_new = init_llm_state(jax.random.PRNGKey(7), TINY, 3, opt, jnp.float32)
+    rng = jax.random.PRNGKey(11)
+    xs = jnp.asarray(
+        np.random.default_rng(1).integers(0, TINY.vocab_size, (3, 2, SEQ)),
+        jnp.int32,
+    )
+    batch = {"tokens": xs, "labels": xs}
+    s_new, m_new = new_step(state_new, batch, rng)
+    s_old, m_old = old_step(state_old, batch, rng)
+    assert_trees_bit_equal({k: v for k, v in s_new.items() if k != "privacy"},
+                           s_old)
+    assert_trees_bit_equal(m_new, m_old)
+
+
+# ------------------------------------------------ jaxpr privacy-cut proof
+def _bank_var_map(step, state, batch, rng):
+    closed = jax.make_jaxpr(step)(state, batch, rng)
+    in_paths = [jax.tree_util.keystr(p) for p, _ in
+                jax.tree_util.tree_leaves_with_path((state, batch, rng))]
+    out_shape = jax.eval_shape(step, state, batch, rng)
+    out_paths = [jax.tree_util.keystr(p) for p, _ in
+                 jax.tree_util.tree_leaves_with_path(out_shape)]
+    invars = dict(zip(in_paths, closed.jaxpr.invars))
+    outvars = dict(zip(out_paths, closed.jaxpr.outvars))
+    banks = {p: (invars[p], outvars[p]) for p in outvars
+             if "client_banks" in p and p in invars}
+    assert banks, "no client-bank leaves found in the jaxpr"
+    return banks
+
+
+def test_detached_jaxpr_banks_are_passthrough():
+    """In `detached` mode every client-bank leaf of the traced step is the
+    SAME jaxpr Var on input and output — the XLA graph provably contains no
+    backward (or forward-update) path into the banks. `e2e` is the negative
+    control: every bank leaf is rewritten."""
+    opt = adamw(1e-3)
+    xs = jnp.zeros((3, 2, SEQ), jnp.int32)
+    batch = {"tokens": xs, "labels": xs}
+    rng = jax.random.PRNGKey(0)
+
+    step = make_guarded_llm_step(TINY, OPTS, opt, 3)
+    state = init_llm_state(jax.random.PRNGKey(0), TINY, 3, opt, jnp.float32)
+    banks = _bank_var_map(step, state, batch, rng)
+    not_passed = [p for p, (i, o) in banks.items() if o is not i]
+    assert not not_passed, f"detached step writes into banks: {not_passed}"
+
+    step_e2e = make_guarded_llm_step(TINY, OPTS, opt, 3, mode="e2e")
+    state_e2e = init_llm_state(jax.random.PRNGKey(0), TINY, 3, opt,
+                               jnp.float32, mode="e2e")
+    banks = _bank_var_map(step_e2e, state_e2e, batch, rng)
+    passed = [p for p, (i, o) in banks.items() if o is i]
+    assert not passed, f"e2e step left bank leaves untrained: {passed}"
+
+
+# --------------------------------------------------- guard-on parity (σ>0)
+def test_guard_on_fold_in_schedule_parity():
+    """With an unclipped guard the engine's release must equal the documented
+    formula exactly: feats + σ·N(fold_in(noise_key, GUARD_KEY_FOLD)). The
+    reference step re-derives that noise from public pieces; training must
+    stay bit-exact, and the accountant must advance once per step."""
+    sigma = 0.05
+    tc = dataclasses.replace(
+        TC, privacy=DPConfig(clip_norm=None, noise_scale=sigma))
+    shards = tiny_shards()
+    session = make_session(tc, seed=0)
+    session.fit(shards, epochs=1, steps_per_epoch=3)
+
+    def step_factory(opt):
+        def loss_fn(server_params, client_banks, batch, rng):
+            noise_keys = jax.random.split(rng, tc.n_clients)
+            feats, _, _ = jax.vmap(
+                lambda cp, bt, nk: transformer.client_forward(
+                    cp, TINY, bt, OPTS, nk),
+            )(client_banks, {"tokens": batch["tokens"]}, noise_keys)
+            feats = jax.vmap(
+                lambda k, f: f + sigma * jax.random.normal(
+                    jax.random.fold_in(k, GUARD_KEY_FOLD), f.shape, jnp.float32)
+            )(noise_keys, feats)
+            C, b, S, d = feats.shape
+            h = feats.reshape(C * b, S, d)
+            pos = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (C * b, S))
+            labels = batch["labels"].reshape(C * b, -1)
+            logits, aux = transformer.server_forward(
+                server_params, TINY, h, pos, OPTS)
+            ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+            return ce + MOE_AUX_WEIGHT * aux, ce
+
+        def step(state, batch, rng):
+            (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["server"], state["client_banks"], batch, rng)
+            grads, _ = clip_by_global_norm(grads, tc.grad_clip)
+            updates, new_opt = opt.update(
+                grads, state["opt"], state["server"], state["step"])
+            return {**state, "server": apply_updates(state["server"], updates),
+                    "opt": new_opt, "step": state["step"] + 1}, {}
+
+        return step
+
+    def init_fn(root, opt):
+        return init_llm_state(root, TINY, tc.n_clients, opt, jnp.float32)
+
+    ref = legacy_reference_fit(tc, shards, seed=0, epochs=1, steps_per_epoch=3,
+                               step_factory=step_factory, init_fn=init_fn)
+    assert_trees_bit_equal(session.state, ref, skip="privacy")
+    assert int(session.state["privacy"]["releases"]) == 3
+    # unclipped σ ⇒ unbounded sensitivity ⇒ the accountant reports inf
+    assert session.privacy_report()["basic_epsilon"] == float("inf")
+
+
+def test_clipped_guard_accountant_advances():
+    tc = dataclasses.replace(
+        TC, privacy=DPConfig(epsilon=1.0, delta=1e-5, clip_norm=1.0))
+    session = make_session(tc, seed=0)
+    session.fit(tiny_shards(), epochs=2, steps_per_epoch=3)
+    assert int(session.state["privacy"]["releases"]) == 6
+    report = session.privacy_report()
+    assert report["basic_epsilon"] == pytest.approx(6.0)
+    assert np.isfinite(report["advanced_epsilon"])
+
+
+# ------------------------------------------------------ session surfaces
+def test_checkpoint_roundtrip_untied_head(tmp_path):
+    """A TIED config is auto-untied (the trust boundary forbids sharing the
+    embedding with the server); the materialized `lm_head` survives the
+    canonical save/restore round-trip, and a same-seed session resumes the
+    exact trajectory (epoch counter included)."""
+    tied = dataclasses.replace(TINY, name="llm-tiny-tied", tie_embeddings=True)
+    shards = tiny_shards()
+    s1 = make_session(cfg=tied, seed=0)
+    s1.fit(shards, epochs=1, steps_per_epoch=3)
+    assert "lm_head" in s1.state["server"]
+
+    path = s1.save(str(tmp_path))
+    s2 = make_session(cfg=tied, seed=0)
+    manifest = s2.restore(path)
+    assert manifest["metadata"]["engine"] == "llm-split"
+    assert s2.engine._epochs_done == 1
+    assert_trees_bit_equal(s1.state, s2.state)
+
+    h1 = s1.fit(shards, epochs=1, steps_per_epoch=3)
+    h2 = s2.fit(shards, epochs=1, steps_per_epoch=3)
+    assert h1[0]["loss"] == h2[0]["loss"]
+    assert_trees_bit_equal(s1.state, s2.state)
+
+
+def test_evaluate_and_audit_surfaces():
+    session = make_session(seed=0)
+    session.fit(tiny_shards(), epochs=1, steps_per_epoch=2)
+    xs = np.random.default_rng(0).integers(0, TINY.vocab_size, (8, SEQ))
+    res = session.evaluate(xs.astype(np.int32), xs.astype(np.int32))
+    assert len(res["per_client"]) == 3
+    assert np.isfinite(res["loss"]) and 0.0 <= res["accuracy"] <= 1.0
+    # the inversion audit optimizes the float (pre-embedded) client path
+    h = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (2, SEQ, 32)))
+    rows = session.audit_privacy(h, sigmas=(0.0, 0.5), steps=10)
+    assert [r["sigma"] for r in rows] == [0.0, 0.5]
+    assert all(np.isfinite(r["mse"]) for r in rows)
+
+
+def test_mesh_1x1_is_bit_exact_noop():
+    from repro.launch.mesh import make_split_mesh
+
+    shards = tiny_shards()
+    sm = make_session(seed=0, mesh=make_split_mesh(1, 1, n_clients=3))
+    s0 = make_session(seed=0)
+    sm.fit(shards, epochs=1, steps_per_epoch=3)
+    s0.fit(shards, epochs=1, steps_per_epoch=3)
+    assert_trees_bit_equal(sm.state, s0.state)
+
+
+# -------------------------------------------- shared_bank ≡ banked sweep
+def _check_shared_equals_banked(n_clients, seed):
+    """`shared_bank=True` must be bit-identical to per-client banks
+    initialized to the same values. (In detached mode frozen identical
+    banks are mathematically ONE bank; XLA's broadcast-vmap and
+    stacked-vmap lower to the same arithmetic.)"""
+    tc = dataclasses.replace(
+        TC, n_clients=n_clients, data_shares=(1.0,) * n_clients,
+        server_batch=2 * n_clients)
+    shards = tiny_shards(n_clients, seed=seed,
+                         sizes=tuple(12 + 2 * i for i in range(n_clients)))
+    sa = make_session(tc, seed=seed, shared_bank=True)
+    sb = make_session(tc, seed=seed)
+    # seed the banked session from the shared canonical state; COPY the
+    # leaves — the engines' donated step frees aliased input buffers
+    sb._native = jax.tree.map(jnp.array, sb.engine.from_canonical(sa.state))
+    sa.fit(shards, epochs=1, steps_per_epoch=3)
+    sb.fit(shards, epochs=1, steps_per_epoch=3)
+    assert_trees_bit_equal(sa.state, sb.state)
+
+
+def test_shared_bank_equivalence_single():
+    _check_shared_equals_banked(3, 3)
+
+
+def test_shared_bank_equivalence_sweep():
+    """Hypothesis sweep of the same property across client counts/seeds."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=5, deadline=None)
+    @given(n_clients=st.integers(2, 4), seed=st.integers(0, 4))
+    def run(n_clients, seed):
+        _check_shared_equals_banked(n_clients, seed)
+
+    run()

@@ -12,11 +12,35 @@ import warnings
 
 import pytest
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 import repro.privacy as privacy
 import repro.privacy.accountant as accountant
 import repro.privacy.audit as audit
 import repro.privacy.guard as guard
+from repro.configs.base import ModelConfig
+from repro.core import distributed
 from repro.core.trainer import SplitTrainConfig
+from repro.models.transformer import ModelOptions
+from repro.optim import adamw
+
+_SHIM_CFG = ModelConfig(
+    name="shim-tiny", family="dense", n_layers=2, d_model=8, n_heads=2,
+    n_kv_heads=1, d_ff=16, vocab_size=13, dtype="float32", cut_layers=1,
+)
+_SHIM_OPTS = ModelOptions(q_block=4, kv_block=4)
+_SHIM_OPT = adamw(1e-3)
+
+
+def _trees_bit_equal(a, b):
+    fa = {jax.tree_util.keystr(p): np.asarray(v)
+          for p, v in jax.tree_util.tree_leaves_with_path(a)}
+    fb = {jax.tree_util.keystr(p): np.asarray(v)
+          for p, v in jax.tree_util.tree_leaves_with_path(b)}
+    return fa.keys() == fb.keys() and all(
+        np.array_equal(fa[k], fb[k]) for k in fa)
 
 
 def _fresh_import_dp():
@@ -65,6 +89,33 @@ def _check_privacy_noise(tc):
     assert tc.privacy_noise == 0.0
 
 
+def _check_make_llm_split_step(step):
+    # delegation equivalence: the shim's step IS make_guarded_llm_step at
+    # privacy=None — one update from a shared state must match bit-exactly
+    # (the full differential pin lives in tests/test_llm_split.py)
+    modern = distributed.make_guarded_llm_step(
+        _SHIM_CFG, _SHIM_OPTS, _SHIM_OPT, 2, grad_clip=1.0)
+    state = distributed.init_llm_state(
+        jax.random.PRNGKey(0), _SHIM_CFG, 2, _SHIM_OPT, jnp.float32)
+    xs = jnp.asarray(
+        np.random.default_rng(0).integers(0, _SHIM_CFG.vocab_size, (2, 1, 4)),
+        jnp.int32)
+    batch = {"tokens": xs, "labels": xs}
+    rng = jax.random.PRNGKey(1)
+    s_old, m_old = step(state, batch, rng)
+    s_new, m_new = modern(state, batch, rng)
+    assert _trees_bit_equal(s_old, s_new) and _trees_bit_equal(m_old, m_new)
+
+
+def _check_init_split_state(state):
+    # the legacy shape is the canonical state minus the accountant leaves
+    modern = distributed.init_llm_state(
+        jax.random.PRNGKey(0), _SHIM_CFG, 2, _SHIM_OPT, jnp.float32)
+    assert set(state) == {"client_banks", "server", "opt", "step"}
+    assert _trees_bit_equal(
+        state, {k: v for k, v in modern.items() if k != "privacy"})
+
+
 SHIMS = [
     ("core-dp-module", _fresh_import_dp,
      "repro.core.dp is deprecated", _check_core_dp),
@@ -74,6 +125,14 @@ SHIMS = [
      "clip_norm is deprecated", _check_clip_norm),
     ("config-privacy-noise", lambda: SplitTrainConfig(privacy_noise=0.05),
      "privacy_noise is deprecated", _check_privacy_noise),
+    ("distributed-make-llm-split-step",
+     lambda: distributed.make_llm_split_step(
+         _SHIM_CFG, _SHIM_OPTS, _SHIM_OPT, 2),
+     "make_llm_split_step is deprecated", _check_make_llm_split_step),
+    ("distributed-init-split-state",
+     lambda: distributed.init_split_state(
+         jax.random.PRNGKey(0), _SHIM_CFG, 2, _SHIM_OPT, jnp.float32),
+     "init_split_state is deprecated", _check_init_split_state),
 ]
 
 

@@ -144,6 +144,58 @@ def test_spl101_suppression_comment():
     assert finds(bare, "SPL101") == []
 
 
+# The LM-cut factory idiom (core/distributed.make_guarded_llm_step): vmapped
+# client_forward over stacked banks, the guard release vmapped at the cut
+# under ``if guard.enabled``, positions recomputed server-side from shape.
+LM_GUARDED_FACTORY = """
+    def make_guarded_llm_step(cfg, opts, opt, n_clients, guard):
+        def loss_fn(server_params, client_banks, batch, rng):
+            noise_keys = jax.random.split(rng, n_clients)
+            feats, _positions, _aux = jax.vmap(
+                lambda cp, bt, nk: client_forward(cp, cfg, bt, opts, nk),
+            )(client_banks, batch["tokens"], noise_keys)
+            if guard.enabled:
+                feats = jax.vmap(lambda k, f: guard(guard.key_for(k), f))(
+                    noise_keys, feats)
+            C, b, S, d = feats.shape
+            h = feats.reshape(C * b, S, d)
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (C * b, S))
+            logits, aux = server_forward(server_params, cfg, h, pos, opts)
+            return logits, aux
+
+        return loss_fn
+"""
+
+
+def test_spl101_lm_factory_guarded_cut_passes():
+    """The shipped LM step factory classifies as sanitized: the vmapped
+    guard lambda clears the taint before the server sink."""
+    assert finds(LM_GUARDED_FACTORY, "SPL101") == []
+
+
+def test_spl101_lm_factory_guard_deleted_flagged():
+    src = LM_GUARDED_FACTORY.replace(
+        """            if guard.enabled:
+                feats = jax.vmap(lambda k, f: guard(guard.key_for(k), f))(
+                    noise_keys, feats)
+""", "")
+    hits = finds(src, "SPL101")
+    assert len(hits) == 1
+
+
+def test_spl101_lm_factory_positions_leak_flagged():
+    # routing the vmapped client tuple's positions into the server call is
+    # a second taint path — the factory must recompute them from shape
+    src = LM_GUARDED_FACTORY.replace(
+        "feats, _positions, _aux",
+        "feats, positions, _aux",
+    ).replace(
+        "h, pos, opts)",
+        "h, positions.reshape(C * b, S), opts)",
+    )
+    assert len(finds(src, "SPL101")) == 1
+
+
 # ---------------------------------------------------------------------------
 # JAX2xx — hygiene
 # ---------------------------------------------------------------------------
@@ -461,3 +513,11 @@ def test_real_tree_is_clean_under_baseline():
     """The acceptance gate: the shipped tree has no unbaselined findings."""
     from tools.splitlint.runner import main as lint_main
     assert lint_main(["src", "benchmarks", "examples", "-q"]) == 0
+
+
+def test_shipped_baseline_is_empty():
+    """Since PR 9 every grandfathered finding either got its guard (the LM
+    cut) or moved to an inline pragma at its site — the baseline must stay
+    empty so the previous test is a ZERO-baseline gate."""
+    path = os.path.join(REPO_ROOT, "tools", "splitlint", "baseline.toml")
+    assert baseline_mod.load_baseline(path) == []

@@ -20,8 +20,8 @@ def test_llm_split_step_end_to_end():
     opts = ModelOptions(q_block=16, kv_block=16)
     opt = adamw(1e-3)
     C, b, S = 2, 2, 16
-    step = jax.jit(distributed.make_llm_split_step(cfg, opts, opt, n_clients=C))
-    state = distributed.init_split_state(jax.random.PRNGKey(0), cfg, C, opt, jnp.float32)
+    step = jax.jit(distributed.make_guarded_llm_step(cfg, opts, opt, n_clients=C))
+    state = distributed.init_llm_state(jax.random.PRNGKey(0), cfg, C, opt, jnp.float32)
     banks_before = jax.tree.map(jnp.copy, state["client_banks"])
 
     key = jax.random.PRNGKey(1)
@@ -89,15 +89,15 @@ def test_shared_bank_equals_banked_when_identically_initialized():
     opt = adamw(1e-3)
     C, b, S = 2, 1, 16
     key = jax.random.PRNGKey(0)
-    st_shared = distributed.init_split_state(key, cfg, C, opt, jnp.float32, shared_bank=True)
+    st_shared = distributed.init_llm_state(key, cfg, C, opt, jnp.float32, shared_bank=True)
     # banked state with every bank = the shared one
     banked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), st_shared["client_banks"]
     )
     st_banked = {**st_shared, "client_banks": banked}
 
-    step_s = jax.jit(distributed.make_llm_split_step(cfg, opts, opt, C, shared_bank=True))
-    step_b = jax.jit(distributed.make_llm_split_step(cfg, opts, opt, C, shared_bank=False))
+    step_s = jax.jit(distributed.make_guarded_llm_step(cfg, opts, opt, C, shared_bank=True))
+    step_b = jax.jit(distributed.make_guarded_llm_step(cfg, opts, opt, C, shared_bank=False))
     toks = jax.random.randint(key, (C, b, S), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
     _, m_s = step_s(st_shared, batch, key)
@@ -113,8 +113,8 @@ def test_llm_e2e_mode_trains_client_banks():
     opt = adamw(1e-3)
     C, b, S = 2, 1, 16
     key = jax.random.PRNGKey(0)
-    st = distributed.init_split_state(key, cfg, C, opt, jnp.float32, mode="e2e")
-    step = jax.jit(distributed.make_llm_split_step(cfg, opts, opt, C, mode="e2e"))
+    st = distributed.init_llm_state(key, cfg, C, opt, jnp.float32, mode="e2e")
+    step = jax.jit(distributed.make_guarded_llm_step(cfg, opts, opt, C, mode="e2e"))
     before = jax.tree.map(jnp.copy, st["client_banks"])
     toks = jax.random.randint(key, (C, b, S), 0, cfg.vocab_size)
     st, m = step(st, {"tokens": toks, "labels": toks}, key)
@@ -131,8 +131,8 @@ def test_hlo_has_no_backward_path_into_client_banks():
     cfg = get_config("llama3.2-1b").reduced()
     opts = ModelOptions(q_block=16, kv_block=16)
     opt = adamw(1e-3)
-    step = distributed.make_llm_split_step(cfg, opts, opt, n_clients=2)
-    state = distributed.init_split_state(jax.random.PRNGKey(0), cfg, 2, opt, jnp.float32)
+    step = distributed.make_guarded_llm_step(cfg, opts, opt, n_clients=2)
+    state = distributed.init_llm_state(jax.random.PRNGKey(0), cfg, 2, opt, jnp.float32)
     toks = jnp.zeros((2, 1, 8), jnp.int32)
     batch = {"tokens": toks, "labels": toks}
     new_state, _ = jax.jit(step)(state, batch, jax.random.PRNGKey(0))
