@@ -1043,6 +1043,53 @@ class SplitSession:
         result["privacy"] = self.privacy_report()
         return result
 
+    def serve(self, trace, shards: Shards, *, max_batch: int = 8,
+              queue_size: int = 64, per_client_cap: Optional[int] = None,
+              max_wait: Optional[int] = None, request_batch: int = 1,
+              pop_retries: int = 0, pop_backoff: float = 2.0,
+              record_features: bool = False, keep_responses: bool = True):
+        """Serve an arrival trace through the split-inference path
+        (docs/serving.md): each request runs its hospital's privacy layer,
+        releases through THIS session's guard at the cut (the training
+        fold-in key schedule, based at the canonical ``step``), queues the
+        guarded features, and a continuously-batching consumer answers up
+        to ``max_batch`` requests per cycle with one jitted trunk forward.
+
+        Works on any engine's checkpoint — the server is built from the
+        CANONICAL state, so a ``restore()``d session serves unchanged.
+        Every release spends (ε, δ) budget exactly like a training release:
+        the accountant leaf in the canonical state advances by the
+        worst-case client's request count (drops and sheds included — the
+        features already left the privacy layer).
+
+        ``trace`` comes from ``repro.serving.traces`` (``poisson_trace`` /
+        ``bursty_trace`` / ``make_trace``); ``shards`` are the per-hospital
+        datasets in the training layout. Returns a
+        ``repro.serving.ServeReport``.
+        """
+        from repro.serving.server import SplitInferenceServer
+
+        server = SplitInferenceServer(
+            self.adapter, self.state, guard=self.guard, max_batch=max_batch,
+            queue_size=queue_size, per_client_cap=per_client_cap,
+            max_wait=max_wait, request_batch=request_batch,
+            pop_retries=pop_retries, pop_backoff=pop_backoff,
+            record_features=record_features, keep_responses=keep_responses,
+            root_key=jax.random.PRNGKey(self.seed),
+            mesh=getattr(self.engine, "mesh", None),
+        )
+        report = server.serve(trace, shards)
+        released = max(report.releases_per_client, default=0)
+        if self.guard.enabled and released:
+            canonical = self.state
+            self._native = self.engine.from_canonical({
+                **canonical,
+                "privacy": budget_advance(
+                    canonical["privacy"], self.config.privacy, released
+                ),
+            })
+        return report
+
     def privacy_report(self, delta_prime: float = 1e-6) -> Dict[str, Any]:
         """The (ε, δ) budget spent so far: the carried release count plus
         basic and advanced composition bounds (``repro.privacy.accountant``).

@@ -1,0 +1,30 @@
+"""Private split-inference serving (see docs/serving.md).
+
+Guarded per-hospital releases -> ``FeatureQueue`` -> continuously-batched
+jitted trunk forward, driven by seeded deterministic arrival traces.
+"""
+from repro.serving.server import (
+    ServeReport,
+    SplitInferenceServer,
+    make_server_batch_forward,
+)
+from repro.serving.traces import (
+    ServeRequest,
+    Trace,
+    TRACE_SHAPES,
+    bursty_trace,
+    make_trace,
+    poisson_trace,
+)
+
+__all__ = [
+    "ServeReport",
+    "ServeRequest",
+    "SplitInferenceServer",
+    "Trace",
+    "TRACE_SHAPES",
+    "bursty_trace",
+    "make_server_batch_forward",
+    "make_trace",
+    "poisson_trace",
+]

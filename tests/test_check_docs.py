@@ -193,11 +193,13 @@ def test_text_fences_are_not_executed(scratch_repo):
 # steps/s citation cross-check
 # ---------------------------------------------------------------------------
 
-def bench(scratch_repo, trainer=None, kernels=None):
+def bench(scratch_repo, trainer=None, kernels=None, serve=None):
     if trainer is not None:
         (scratch_repo / "BENCH_trainer.json").write_text(json.dumps(trainer))
     if kernels is not None:
         (scratch_repo / "BENCH_kernels.json").write_text(json.dumps(kernels))
+    if serve is not None:
+        (scratch_repo / "BENCH_serve.json").write_text(json.dumps(serve))
 
 
 def test_bench_values_walks_nested_and_derived_strings(scratch_repo):
@@ -237,6 +239,42 @@ def test_roadmap_is_exempt_from_citation_check(scratch_repo):
         # Roadmap
 
         PR 3 history: 123.4 steps/s back then.
+    """)
+    assert check_docs.check_steps_citations() == []
+
+
+def test_ms_and_rps_citations_match_serve_record(scratch_repo):
+    bench(scratch_repo,
+          serve={"poisson": {"p50_ms": 2.430499998, "p99_ms": 39.5902,
+                             "throughput_rps": 853.9894}})
+    write(scratch_repo / "docs" / "serving.md", """
+        # Serving
+
+        Steady state: 2.43 ms p50, 39.59 ms p99, 854.0 req/s.
+    """)
+    assert check_docs.check_steps_citations() == []
+
+
+def test_ms_citation_mismatch_reported(scratch_repo):
+    bench(scratch_repo, serve={"poisson": {"p50_ms": 2.43}})
+    write(scratch_repo / "docs" / "serving.md", """
+        # Serving
+
+        A made-up 9.99 ms p50 and a made-up 123.4 req/s.
+    """)
+    errors = check_docs.check_steps_citations()
+    assert len(errors) == 2
+    assert any("9.99 ms" in e for e in errors)
+    assert any("123.4 req/s" in e for e in errors)
+
+
+def test_unitful_prose_without_number_is_not_a_citation(scratch_repo):
+    # no BENCH files at all: bare unit words must not trip the check
+    write(scratch_repo / "docs" / "serving.md", """
+        # Serving
+
+        Latency is reported in ms and throughput in req/s; the steps/s
+        rows live in the trainer record.
     """)
     assert check_docs.check_steps_citations() == []
 

@@ -1,0 +1,430 @@
+"""Harness for the split-inference serving path (PR 10 tentpole).
+
+The serving batcher must not change numerics and must account for every
+request, so the suite is differential + property-based, in the
+``test_llm_split.py`` discipline:
+
+  * differential: the continuously-batched serving trunk forward vs the
+    training-path ``adapter.server_forward`` on identical guarded features
+    — for the MLP, CNN AND LM trunks — bit-exact within the compiled
+    program family (solo-in-padded-batch dispatch, arbitrary co-riders and
+    padding), fp32-reassociation-tight across program shapes (eager and
+    per-item jit references);
+  * guard key-schedule parity: a serving release reproduces the documented
+    training formula ``feats + σ·N(fold_in(fold_in(fold_in(fold_in(root,
+    step), client), release), GUARD_KEY_FOLD))`` leaf-exactly;
+  * properties (Hypothesis when available, deterministic cases always):
+    ``answered + dropped + shed == offered``, no request answered twice,
+    per-client queue caps never exceeded, same-seed replay bit-for-bit;
+  * lifecycle: checkpoints from any engine serve unchanged
+    (save → restore → serve fingerprints match), serving spends (ε, δ)
+    budget like training releases.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.paper_models import CHOLESTEROL_MLP, COVID_CNN
+from repro.core import SplitSession, SplitTrainConfig
+from repro.core.adapters import cnn_adapter, mlp_adapter
+from repro.core.distributed import llm_adapter
+from repro.data import make_cholesterol, make_covid_ct, split_clients
+from repro.models.transformer import ModelOptions
+from repro.optim import adamw
+from repro.privacy import DPConfig
+from repro.privacy.guard import GUARD_KEY_FOLD
+from repro.serving import (
+    ServeRequest,
+    Trace,
+    bursty_trace,
+    make_trace,
+    poisson_trace,
+)
+
+SMALL_CNN = dataclasses.replace(
+    COVID_CNN, input_hw=(16, 16), stages=((8, 1), (16, 1)), dense_units=(16,)
+)
+TINY_LM = ModelConfig(
+    name="llm-tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=97, dtype="float32", cut_layers=1,
+    privacy_noise=0.02,
+)
+LM_OPTS = ModelOptions(q_block=8, kv_block=8)
+SEQ = 8
+
+UNGUARDED = SplitTrainConfig(server_batch=48)
+GUARDED = SplitTrainConfig(
+    server_batch=48, privacy=DPConfig(noise_scale=0.3, clip_norm=None)
+)
+
+
+@pytest.fixture(scope="module")
+def chol_shards():
+    x, y = make_cholesterol(600, seed=0)
+    return split_clients(x, y)
+
+
+@pytest.fixture(scope="module")
+def mlp_session(chol_shards):
+    s = SplitSession(mlp_adapter(CHOLESTEROL_MLP), GUARDED, adamw(1e-2),
+                     engine="auto", seed=0)
+    s.fit(chol_shards, epochs=1, steps_per_epoch=4)
+    return s
+
+
+def burst_trace(n_at_zero: int, n_clients: int = 3, horizon: int = 1) -> Trace:
+    """All requests land on cycle 0 — the deterministic backlog builder."""
+    reqs = tuple(
+        ServeRequest(req_id=i, client_id=i % n_clients, arrival=0)
+        for i in range(n_at_zero)
+    )
+    return Trace(kind="burst0", seed=0, n_clients=n_clients, horizon=horizon,
+                 requests=reqs)
+
+
+# ------------------------------------------------------------------- traces
+def test_traces_deterministic_and_registered():
+    for kind in ("poisson", "bursty"):
+        a = make_trace(kind, 3, seed=11)
+        b = make_trace(kind, 3, seed=11)
+        assert a == b, kind
+        assert a != make_trace(kind, 3, seed=12)
+    # two shapes at equal seed draw from DIFFERENT streams
+    assert poisson_trace(3, seed=4) != bursty_trace(3, seed=4)
+    with pytest.raises(ValueError, match="unknown trace shape"):
+        make_trace("uniform", 3)
+
+
+def test_trace_invariants():
+    t = poisson_trace(4, rate=5.0, horizon=20, seed=3,
+                      shares=(0.7, 0.1, 0.1, 0.1))
+    assert t.offered == len(t.requests)
+    assert sorted(r.req_id for r in t.requests) == list(range(t.offered))
+    assert all(0 <= r.arrival < t.horizon for r in t.requests)
+    by_cycle = t.by_cycle()
+    assert sum(len(v) for v in by_cycle.values()) == t.offered
+    # the dominant-share hospital queries most (law of large numbers at
+    # rate*horizon*0.7 = 70 expected vs 10 for the others)
+    counts = np.bincount([r.client_id for r in t.requests], minlength=4)
+    assert counts[0] > max(counts[1:])
+
+
+# ------------------------------------------------- differential: numerics
+def _serve(session, shards, trace, **kw):
+    kw.setdefault("record_features", True)
+    return session.serve(trace, shards, **kw)
+
+
+def _assert_responses_match_training_forward(session, report, *,
+                                             max_batch=8):
+    """Every answered request's routed response must be the trunk forward
+    on that request's recorded guarded features — the serving batcher adds
+    no numerics of its own.
+
+    Two-tier differential, the repo's cross-engine parity discipline:
+
+      * BIT-EXACT against an independently-built single-request dispatch
+        through the same program family (``make_server_batch_forward`` with
+        the request alone among zero padding) — queue, routing, padding and
+        co-riders contribute nothing, not one bit;
+      * allclose at fp32 reassociation tolerance against the
+        TRAINING-path ``adapter.server_forward`` (eager AND per-item jit).
+        XLA compiles differently-shaped programs with different fusion
+        choices, so cross-program bitwise equality is a backend accident —
+        the engines' own σ=0 parity contracts all compare like-shaped
+        jitted programs for the same reason.
+    """
+    from repro.serving.server import make_server_batch_forward
+
+    adapter, server = session.adapter, session.state["server"]
+    solo_fwd = make_server_batch_forward(adapter)
+    jit_fwd = jax.jit(adapter.server_forward)
+    assert report.answered > 0
+    for rid, resp in report.responses.items():
+        feats = jnp.asarray(report.features[rid])
+        padded = jnp.concatenate([
+            feats[None],
+            jnp.zeros((max_batch - 1,) + feats.shape, feats.dtype),
+        ])
+        solo = np.asarray(jax.device_get(solo_fwd(server, padded)))[0]
+        np.testing.assert_array_equal(resp, solo, err_msg=f"req {rid} (solo)")
+        for name, ref in (
+            ("eager", adapter.server_forward(server, feats)),
+            ("jit", jit_fwd(server, feats)),
+        ):
+            np.testing.assert_allclose(
+                resp, np.asarray(jax.device_get(ref)), rtol=1e-5, atol=1e-5,
+                err_msg=f"req {rid} ({name})")
+
+
+def test_differential_mlp_trunk(mlp_session, chol_shards):
+    rep = _serve(mlp_session, chol_shards, poisson_trace(3, rate=3.0,
+                                                         horizon=8, seed=7))
+    _assert_responses_match_training_forward(mlp_session, rep)
+
+
+def test_differential_cnn_trunk():
+    x, y = make_covid_ct(48, hw=16, seed=0)
+    shards = split_clients(x, y)
+    s = SplitSession(cnn_adapter(SMALL_CNN), GUARDED, adamw(1e-3),
+                     engine="auto", seed=1)
+    rep = _serve(s, shards, poisson_trace(3, rate=2.0, horizon=4, seed=2))
+    _assert_responses_match_training_forward(s, rep)
+
+
+def test_differential_lm_trunk():
+    """The LM trunk through the SAME generic serving path: guarded
+    ``[b, S, d]`` feature releases batched into one vmapped trunk forward,
+    bit-exact vs the training ``server_forward`` logits."""
+    rng = np.random.default_rng(0)
+    shards = [
+        (w, w) for w in (
+            rng.integers(0, TINY_LM.vocab_size, (n, SEQ)).astype(np.int32)
+            for n in (24, 16, 12)
+        )
+    ]
+    tc = SplitTrainConfig(
+        n_clients=3, data_shares=(0.7, 0.2, 0.1), server_batch=6,
+        privacy=DPConfig(noise_scale=0.05, clip_norm=None),
+    )
+    s = SplitSession(llm_adapter(TINY_LM, LM_OPTS), tc, adamw(1e-3),
+                     engine="llm-split", seed=3)
+    rep = _serve(s, shards, poisson_trace(3, rate=1.5, horizon=4, seed=9),
+                 max_batch=4)
+    _assert_responses_match_training_forward(s, rep, max_batch=4)
+    some = next(iter(rep.responses.values()))
+    assert some.shape == (1, SEQ, TINY_LM.vocab_size)  # request_batch logits
+
+
+def test_batch_composition_invariance(mlp_session, chol_shards):
+    """Admission knobs only schedule; they must not touch a response bit.
+    The same trace served with and without tight caps composes completely
+    different batches (different co-riders, different padding fills), yet
+    every request answered in both runs gets bit-identical logits — a vmap
+    lane's math depends on its own slot only."""
+    trace = bursty_trace(3, base_rate=1.0, burst_rate=6.0, period=6,
+                         burst_len=2, horizon=10, seed=21)
+    rep_open = _serve(mlp_session, chol_shards, trace, max_batch=8,
+                      queue_size=256)
+    rep_capped = _serve(mlp_session, chol_shards, trace, max_batch=8,
+                        queue_size=4, per_client_cap=1)
+    assert rep_open.answered == trace.offered
+    assert rep_capped.dropped > 0  # compositions really did change
+    common = set(rep_open.responses) & set(rep_capped.responses)
+    assert common
+    for rid in common:
+        np.testing.assert_array_equal(rep_open.responses[rid],
+                                      rep_capped.responses[rid])
+
+
+def test_guard_key_schedule_parity(mlp_session, chol_shards):
+    """A serving release is the documented training release: client forward
+    + σ·N on the fold-in chain root→step→client→release→GUARD_KEY_FOLD.
+    Reproduces client 0's first release leaf-exactly from the formula."""
+    trace = poisson_trace(3, rate=3.0, horizon=6, seed=13)
+    rep = _serve(mlp_session, chol_shards, trace)
+    first = next(r for r in trace.requests if r.client_id == 0)
+    state = mlp_session.state
+    bank = jax.tree.map(lambda a: a[0], state["client_banks"])
+    # the serve drive's own sampling stream (seeded on the trace)
+    from repro.serving.server import _SAMPLE_RNG_TAG
+    xs = np.asarray(chol_shards[0][0])
+    idx = np.random.default_rng((trace.seed, _SAMPLE_RNG_TAG, 0)).integers(
+        0, len(xs), size=1)
+    key = jax.random.fold_in(
+        jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(mlp_session.seed),
+                               int(state["step"])), 0), 1)
+    sigma = mlp_session.guard.sigma
+    adapter = mlp_session.adapter
+
+    @jax.jit  # jitted like the release itself — same graph, same rounding
+    def reference_release(p, x, k):
+        feats = adapter.client_forward(p, x, k)
+        return feats + sigma * jax.random.normal(
+            jax.random.fold_in(k, GUARD_KEY_FOLD), feats.shape, feats.dtype)
+
+    ref = reference_release(bank, jnp.asarray(xs[idx]), key)
+    np.testing.assert_array_equal(
+        rep.features[first.req_id], np.asarray(jax.device_get(ref)))
+
+
+# --------------------------------------------------- admission + lifecycle
+def test_conservation_and_admission_classes(mlp_session, chol_shards):
+    """Tight queue + caps + deadline: every admission-control path fires and
+    the ledger still balances."""
+    trace = bursty_trace(3, base_rate=0.5, burst_rate=12.0, period=6,
+                         burst_len=3, horizon=12, seed=5)
+    rep = _serve(mlp_session, chol_shards, trace, max_batch=2, queue_size=6,
+                 per_client_cap=3, max_wait=1)
+    assert rep.offered == trace.offered
+    assert rep.answered + rep.dropped + rep.shed == rep.offered
+    assert rep.accepted == rep.answered + rep.shed
+    assert rep.dropped == rep.dropped_full + rep.dropped_cap
+    assert rep.dropped > 0  # the burst must overwhelm a 6-slot queue
+    for c, pc in enumerate(rep.per_client):
+        assert pc["offered"] == pc["answered"] + pc["dropped"] + pc["shed"]
+        assert rep.max_inflight_per_client[c] <= 3
+    assert sum(pc["offered"] for pc in rep.per_client) == rep.offered
+    # the queue's own ledger agrees with the report's
+    assert rep.queue_stats["pushed"] == rep.accepted
+    assert rep.queue_stats["rejected"] == rep.dropped
+    assert rep.queue_stats["popped"] == rep.answered + rep.shed
+
+
+def test_shedding_deadline(mlp_session, chol_shards):
+    """A cycle-0 backlog against max_batch=2, max_wait=0: exactly the first
+    batch is fresh enough, the rest age out — deterministically."""
+    rep = _serve(mlp_session, chol_shards, burst_trace(9), max_batch=2,
+                 queue_size=32, max_wait=0)
+    assert (rep.answered, rep.shed, rep.dropped) == (2, 7, 0)
+    assert all(v == 0 for v in rep.latency_cycles.values())
+
+
+def test_per_client_cap_rejections(mlp_session, chol_shards):
+    rep = _serve(mlp_session, chol_shards, burst_trace(9), max_batch=8,
+                 queue_size=32, per_client_cap=1)
+    # 3 clients x cap 1: exactly 3 admitted, 6 rejected by the cap
+    assert (rep.accepted, rep.dropped_cap, rep.dropped_full) == (3, 6, 0)
+    assert max(rep.max_inflight_per_client) <= 1
+
+
+def test_empty_trace_serves_cleanly(mlp_session, chol_shards):
+    trace = Trace(kind="empty", seed=0, n_clients=3, horizon=4, requests=())
+    rep = mlp_session.serve(trace, chol_shards)
+    assert (rep.offered, rep.answered, rep.batches) == (0, 0, 0)
+    assert rep.cycles == 4
+    assert rep.fingerprint() == rep.fingerprint()
+
+
+def test_serve_validates_shapes(mlp_session, chol_shards):
+    with pytest.raises(ValueError, match="covers 2 clients"):
+        mlp_session.serve(poisson_trace(2, horizon=2, seed=0), chol_shards)
+    with pytest.raises(ValueError, match="max_batch"):
+        mlp_session.serve(poisson_trace(3, horizon=2, seed=0), chol_shards,
+                          max_batch=0)
+
+
+def test_serving_spends_privacy_budget(chol_shards):
+    """Every offered request releases guarded features — the accountant
+    advances by the worst-case client's request count, drops included."""
+    s = SplitSession(mlp_adapter(CHOLESTEROL_MLP), GUARDED, adamw(1e-2),
+                     engine="auto", seed=0)
+    trace = poisson_trace(3, rate=3.0, horizon=8, seed=7)
+
+    def releases(session):
+        return int(np.asarray(session.state["privacy"]["releases"]))
+
+    before = releases(s)
+    rep = s.serve(trace, chol_shards, queue_size=4)  # force some drops
+    per_client = np.bincount([r.client_id for r in trace.requests],
+                             minlength=3)
+    assert rep.releases_per_client == per_client.tolist()
+    assert releases(s) - before == per_client.max()
+
+    # guard off: no budget moves
+    s0 = SplitSession(mlp_adapter(CHOLESTEROL_MLP), UNGUARDED, adamw(1e-2),
+                      engine="auto", seed=0)
+    s0.serve(trace, chol_shards)
+    assert releases(s0) == 0
+
+
+def test_checkpoints_serve_unchanged(tmp_path, chol_shards):
+    """The tentpole claim: checkpoints serve unchanged. A save → restore
+    round-trip reproduces the serve fingerprint bit-for-bit, and the queue
+    engines' interchangeable checkpoints (protocol-async ↔ fused-queue,
+    PR 4) serve identically too — all through one canonical state."""
+    ad = mlp_adapter(CHOLESTEROL_MLP)
+    trace = poisson_trace(3, rate=2.0, horizon=6, seed=17)
+
+    s = SplitSession(ad, GUARDED, adamw(1e-2), engine="fused-scan", seed=0)
+    s.fit(chol_shards, epochs=1, steps_per_epoch=4)
+    rep = s.serve(trace, chol_shards)
+    path = s.save(str(tmp_path / "fused"))
+    s2 = SplitSession(ad, GUARDED, adamw(1e-2), engine="fused-scan", seed=0)
+    s2.restore(path)
+    assert s2.serve(trace, chol_shards).fingerprint() == rep.fingerprint()
+
+    sq = SplitSession(ad, GUARDED, adamw(1e-2), engine="fused-queue",
+                      seed=0, threaded=False)
+    sq.fit(chol_shards, epochs=1, steps_per_epoch=4)
+    rep_q = sq.serve(trace, chol_shards)
+    path_q = sq.save(str(tmp_path / "queue"))
+    sp = SplitSession(ad, GUARDED, adamw(1e-2), engine="protocol-async",
+                      seed=0, threaded=False)
+    sp.restore(path_q)
+    assert sp.serve(trace, chol_shards).fingerprint() == rep_q.fingerprint()
+
+
+# --------------------------------------------------------------- properties
+def _property_case(session, shards, trace, *, max_batch, queue_size,
+                   per_client_cap, max_wait):
+    rep = session.serve(trace, shards, max_batch=max_batch,
+                        queue_size=queue_size,
+                        per_client_cap=per_client_cap, max_wait=max_wait)
+    # conservation
+    assert rep.offered == trace.offered
+    assert rep.answered + rep.dropped + rep.shed == rep.offered
+    assert rep.dropped == rep.dropped_full + rep.dropped_cap
+    # no request answered twice, and only real requests answered
+    assert len(rep.responses) == rep.answered
+    assert set(rep.responses) <= {r.req_id for r in trace.requests}
+    assert set(rep.latency_cycles) == set(rep.responses)
+    # caps never exceeded
+    if per_client_cap is not None:
+        assert max(rep.max_inflight_per_client, default=0) <= per_client_cap
+    # same-seed replay is bit-for-bit
+    rep2 = session.serve(trace, shards, max_batch=max_batch,
+                         queue_size=queue_size,
+                         per_client_cap=per_client_cap, max_wait=max_wait)
+    assert rep.deterministic_stats() == rep2.deterministic_stats()
+    assert rep.fingerprint() == rep2.fingerprint()
+    return rep
+
+
+PROPERTY_CASES = [
+    ("poisson", 31, 1, 4, None, None),
+    ("poisson", 32, 4, 6, 2, 1),
+    ("bursty", 33, 2, 5, 3, 0),
+    ("bursty", 34, 8, 64, None, 3),
+]
+
+
+@pytest.mark.parametrize("kind,seed,max_batch,queue_size,cap,max_wait",
+                         PROPERTY_CASES)
+def test_serving_properties_deterministic(mlp_session, chol_shards, kind,
+                                          seed, max_batch, queue_size, cap,
+                                          max_wait):
+    """The Hypothesis sweep's invariants on fixed cases — always runs."""
+    trace = make_trace(kind, 3, seed=seed, horizon=10)
+    _property_case(mlp_session, chol_shards, trace, max_batch=max_batch,
+                   queue_size=queue_size, per_client_cap=cap,
+                   max_wait=max_wait)
+
+
+def test_serving_properties_hypothesis(mlp_session, chol_shards):
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed; the deterministic "
+        "cases above cover the fixed seeds")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        kind=st.sampled_from(["poisson", "bursty"]),
+        seed=st.integers(0, 2**16),
+        max_batch=st.integers(1, 8),
+        queue_size=st.integers(2, 32),
+        cap=st.one_of(st.none(), st.integers(1, 4)),
+        max_wait=st.one_of(st.none(), st.integers(0, 3)),
+    )
+    def prop(kind, seed, max_batch, queue_size, cap, max_wait):
+        trace = make_trace(kind, 3, seed=seed, horizon=8)
+        _property_case(mlp_session, chol_shards, trace, max_batch=max_batch,
+                       queue_size=queue_size, per_client_cap=cap,
+                       max_wait=max_wait)
+
+    prop()

@@ -196,6 +196,43 @@ def test_spl101_lm_factory_positions_leak_flagged():
     assert len(finds(src, "SPL101")) == 1
 
 
+# The serving-cut idiom (serving/server.py): the inference server builds ONE
+# guarded release program in __init__ and every admission routes through it
+# before the queue push — exactly the training fleet's sanitizer.
+SERVING_GUARDED_CUT = """
+    class SplitInferenceServer:
+        def __init__(self, adapter, banks, guard, queue):
+            self.queue = queue
+            self.banks = banks
+            self._client_fwd = make_client_release_fwd(adapter, guard)
+
+        def _release(self, cid, x, key):
+            return self._client_fwd(self.banks[cid], x, key)
+
+        def admit(self, cid, x, key, req_id):
+            feats = self._release(cid, x, key)
+            return self.queue.push(cid, feats, req_id)
+"""
+
+
+def test_spl101_serving_guarded_cut_passes():
+    """The shipped serving admission path classifies as sanitized: the
+    request's features reach the queue only through the guard release."""
+    assert finds(SERVING_GUARDED_CUT, "SPL101") == []
+
+
+def test_spl101_serving_cut_guard_deleted_flagged():
+    # inline a raw client forward into the admission path (the taint pass
+    # is per-function): activation -> queue.push with no release in between
+    src = SERVING_GUARDED_CUT.replace(
+        "feats = self._release(cid, x, key)",
+        "feats = client_forward(self.banks[cid], x, key)",
+    )
+    hits = finds(src, "SPL101")
+    assert len(hits) == 1
+    assert "push" in hits[0].message
+
+
 # ---------------------------------------------------------------------------
 # JAX2xx — hygiene
 # ---------------------------------------------------------------------------

@@ -13,11 +13,12 @@ Three jobs, zero dependencies beyond the repo itself:
      in the docs is a promise, so all of them are tested like one (blocks
      that are deliberately not runnable — state-shape sketches, API
      signatures — carry a ```text fence instead).
-  3. Every "<number> steps/s" citation in README.md and docs/*.md must
-     match a value recorded in ``BENCH_trainer.json`` / ``BENCH_kernels.json``
-     at the citation's own precision — the docs cannot quote throughput the
-     benchmarks don't back. (ROADMAP.md is exempt: it records the
-     historical trajectory across PRs, which the current JSONs replace.)
+  3. Every "<number> steps/s", "<number> ms" and "<number> req/s" citation
+     in README.md and docs/*.md must match a value recorded in
+     ``BENCH_trainer.json`` / ``BENCH_kernels.json`` / ``BENCH_serve.json``
+     at the citation's own precision — the docs cannot quote throughput or
+     latency the benchmarks don't back. (ROADMAP.md is exempt: it records
+     the historical trajectory across PRs, which the current JSONs replace.)
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -38,7 +39,11 @@ FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 # a number immediately followed by a steps/s (or steps/sec) unit; prose like
 # "the protocol-async steps/s" has no adjacent number and is not a citation
 STEPS_RE = re.compile(r"(\d[\d,]*(?:\.\d+)?)\s*steps\s*/\s*s(?:ec)?\b")
-BENCH_FILES = ("BENCH_trainer.json", "BENCH_kernels.json")
+# serving latency / throughput citations, same discipline (PR 10)
+MS_RE = re.compile(r"(\d[\d,]*(?:\.\d+)?)\s*ms\b")
+RPS_RE = re.compile(r"(\d[\d,]*(?:\.\d+)?)\s*req\s*/\s*s(?:ec)?\b")
+UNIT_CITATIONS = ((STEPS_RE, "steps/s"), (MS_RE, "ms"), (RPS_RE, "req/s"))
+BENCH_FILES = ("BENCH_trainer.json", "BENCH_kernels.json", "BENCH_serve.json")
 
 
 def doc_files():
@@ -172,23 +177,25 @@ def _bench_values() -> list:
 
 
 def check_steps_citations() -> list:
-    """A cited "<number> steps/s" must equal some benchmark-recorded value
-    when that value is rounded to the citation's printed precision."""
+    """A cited "<number> steps/s" / "<number> ms" / "<number> req/s" must
+    equal some benchmark-recorded value when that value is rounded to the
+    citation's printed precision."""
     bench = _bench_values()
     errors = []
     for path in example_files():
         rel = os.path.relpath(path, REPO)
         with open(path, encoding="utf-8") as f:
             text = f.read()
-        for m in STEPS_RE.finditer(text):
-            token = m.group(1).replace(",", "")
-            cited = float(token)
-            decimals = len(token.partition(".")[2])
-            if not any(round(v, decimals or None) == cited for v in bench):
-                errors.append(
-                    f"{rel}: cites {m.group(1)} steps/s, not found in "
-                    f"{' or '.join(BENCH_FILES)}"
-                )
+        for unit_re, unit in UNIT_CITATIONS:
+            for m in unit_re.finditer(text):
+                token = m.group(1).replace(",", "")
+                cited = float(token)
+                decimals = len(token.partition(".")[2])
+                if not any(round(v, decimals or None) == cited for v in bench):
+                    errors.append(
+                        f"{rel}: cites {m.group(1)} {unit}, not found in "
+                        f"{' or '.join(BENCH_FILES)}"
+                    )
     return errors
 
 
